@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: graph builders per SNAP trace, timing, CSV."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, MoctopusEngine
+from repro.core.partition import (
+    MoctopusPartitioner,
+    PartitionConfig,
+    PIMHashPartitioner,
+)
+from repro.core.storage import build_snapshot
+from repro.data.graphs import SNAP_TABLE, make_snap_like
+
+
+def timed(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return sorted(ts)[len(ts) // 2]
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def build_trace_graph(trace, scale_nodes: int, seed: int = 0):
+    src, dst, n = make_snap_like(trace, scale_nodes=scale_nodes, seed=seed)
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    return src[idx], dst[idx], n
+
+
+def build_engines(src, dst, n, P: int = 8, batch_hint: int = 256):
+    """(moctopus_engine, pimhash_engine) over the same graph."""
+    cfg = PartitionConfig(num_partitions=P)
+    moc = MoctopusPartitioner(n, cfg)
+    step = max(len(src) // 16, 1)
+    for i in range(0, len(src), step):
+        moc.on_edges(src[i : i + step], dst[i : i + step])
+    # adaptive repair runs during query processing (paper §3.2.2); a few
+    # rounds approximate the steady state the paper measures at
+    for _ in range(4):
+        if moc.migration_pass(src, dst) == 0:
+            break
+    hsh = PIMHashPartitioner(n, PartitionConfig(num_partitions=P))
+    hsh.on_edges(src, dst)
+    snap_m = build_snapshot(src, dst, n, moc.partition_of, P, hot_threshold=512)
+    snap_h = build_snapshot(src, dst, n, hsh.partition_of, P, hot_threshold=512)
+    e_m = MoctopusEngine(snap_m, EngineConfig(), mode="simulated")
+    e_h = MoctopusEngine(snap_h, EngineConfig(), mode="simulated")
+    return e_m, e_h, moc, hsh

@@ -1,0 +1,421 @@
+"""§Perf hillclimb driver: lowers variant configurations of the three
+selected cells and records the roofline-term deltas.
+
+Run AFTER the dry-run sweep (reuses its machinery):
+    PYTHONPATH=src python -m benchmarks.perf_cells [--cell rpq|kimi|glm4]
+
+Variants are explicit hypothesis -> change pairs; results land in
+experiments/perf/<cell>__<variant>.json and the printed table feeds
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Any, Dict
+
+# the dry-run module sets XLA_FLAGS=512 host devices on import — required
+from repro.launch import dryrun as dr  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+PERF_DIR = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+)
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def measure(tag: str, fn, args, mesh, force=False) -> Dict[str, Any]:
+    os.makedirs(PERF_DIR, exist_ok=True)
+    path = os.path.join(PERF_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        return json.load(open(path))
+    with mesh:
+        compiled = jax.jit(fn).lower(*args).compile()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        ma = compiled.memory_analysis()
+    coll = dr.collective_bytes(hlo)
+    counts = coll.pop("_counts", {})
+    rec = {
+        "tag": tag,
+        "flops": float(ca.get("flops") or 0),
+        "bytes": float(ca.get("bytes accessed") or 0),
+        "coll_bytes": float(sum(coll.values())),
+        "coll_by_op": coll,
+        "coll_counts": counts,
+        "arg_bytes": getattr(ma, "argument_size_in_bytes", 0),
+        "t_compute": float(ca.get("flops") or 0) / PEAK_FLOPS,
+        "t_memory": float(ca.get("bytes accessed") or 0) / HBM_BW,
+        "t_collective": float(sum(coll.values())) / LINK_BW,
+    }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def show(recs):
+    print(f"{'variant':46s} {'compute(s)':>11s} {'memory(s)':>11s} {'coll(s)':>11s} {'bound(s)':>10s}")
+    for r in recs:
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        print(
+            f"{r['tag']:46s} {r['t_compute']:11.3e} {r['t_memory']:11.3e} "
+            f"{r['t_collective']:11.3e} {bound:10.3e}"
+        )
+
+
+# --------------------------------------------------------------------- #
+# Cell 1: moctopus-rpq x snap_mid (single pod)
+
+
+def rpq_variants(force=False):
+    from repro.configs.moctopus_rpq import RPQConfig, snapshot_stub
+    from repro.core.engine import EngineConfig, MoctopusEngine
+
+    mesh = make_production_mesh(multi_pod=False)
+    shape = get_arch("moctopus-rpq").shapes["snap_mid"]
+    dims = shape.dims
+    Pm = mesh.shape["model"]
+
+    def build(cfg_rpq: "RPQConfig", ecfg: EngineConfig):
+        snap = snapshot_stub(dims["n_nodes"], Pm, cfg_rpq, avg_degree=dims["avg_degree"])
+        eng = MoctopusEngine(snap, ecfg, mesh=mesh, mode="sharded")
+        fn, _ = eng.make_khop_fn(dims["k"])
+        dt = jnp.dtype(ecfg.accum_dtype)
+        f_in = dr._sds((dims["batch"], snap.n_pad), dt, mesh, P("data", "model"))
+        n_local = snap.n_local
+        E_off = max(
+            (dims["n_nodes"] * dims["avg_degree"])
+            // (10 * len(snap.buckets) * Pm),
+            8,
+        )
+        h_pad = snap.hot_dense.shape[1]
+        hd = jnp.dtype(ecfg.accum_dtype if ecfg.accum_dtype != "uint8" else "float32")
+        gargs = (
+            dr._sds((Pm, n_local, cfg_rpq.in_ell_width), jnp.int32, mesh, P("model")),
+            dr._sds((Pm, h_pad, n_local), hd, mesh, P("model")),
+            dr._sds((Pm, h_pad), jnp.int32, mesh, P("model")),
+            dr._sds((Pm, h_pad), jnp.int32, mesh, P("model")),
+            *[dr._sds((Pm, E_off), jnp.int32, mesh, P("model")) for _ in snap.buckets],
+            *[dr._sds((Pm, E_off), jnp.int32, mesh, P("model")) for _ in snap.buckets],
+        )
+        return fn, (f_in,) + gargs
+
+    recs = []
+    base_cfg = RPQConfig(name="rpq")  # 4 active offsets (moctopus locality)
+    # it0: paper-faithful baseline — f32 count frontier, systolic offsets
+    fn, args = build(base_cfg, EngineConfig())
+    recs.append(measure("rpq__it0_baseline_f32_count", fn, args, mesh, force))
+    # contrast: PIM-hash placement — ALL 16 offsets active (Fig 5 in HLO)
+    hash_cfg = dataclasses.replace(base_cfg, active_offsets=16)
+    fn, args = build(hash_cfg, EngineConfig())
+    recs.append(measure("rpq__contrast_pimhash_16offsets", fn, args, mesh, force))
+    # it1: boolean semiring + uint8 accumulators (4x scatter/gather bytes)
+    fn, args = build(
+        base_cfg, EngineConfig(semiring="bool", accum_dtype="uint8")
+    )
+    recs.append(measure("rpq__it1_bool_uint8", fn, args, mesh, force))
+    # it2: + packed uint32 bitmap ppermute (32x collective payload)
+    fn, args = build(
+        base_cfg,
+        EngineConfig(semiring="bool", accum_dtype="uint8", bitmap_collectives=True),
+    )
+    recs.append(measure("rpq__it2_bool_uint8_bitmapcoll", fn, args, mesh, force))
+    # it3: uint8 accumulators REVERTED (refuted: XLA widens u8 scatter-max,
+    # +62% bytes) — keep f32 accum + bitmap wire
+    fn, args = build(
+        base_cfg, EngineConfig(semiring="bool", bitmap_collectives=True)
+    )
+    recs.append(measure("rpq__it3_bool_f32_bitmapcoll", fn, args, mesh, force))
+    # it4: Pallas pull-ELL kernel (VMEM-resident frontier stripe: the W=16
+    # gather-accumulate runs in VMEM; HBM sees F once in + out once).
+    # pallas custom-calls are opaque to cost_analysis AND interpret-mode
+    # lowering at this grid size is infeasible on CPU, so the measurement
+    # is by exact subtraction: lower the SAME program with in_ell_width=0
+    # to isolate the jnp pull's bytes, then add the kernel's analytic
+    # traffic (tiling contract in kernels/ell_spmm.py).
+    # it5: saturated COUNT semiring (adds fuse; scatter-max measured ~5x
+    # worse bytes) + bitmap wire — boolean answers preserved by per-hop
+    # clipping, wire packs (partial != 0)
+    fn, args = build(
+        base_cfg, EngineConfig(semiring="count", saturate=True, bitmap_collectives=True)
+    )
+    recs.append(measure("rpq__it5_satcount_f32_bitmapcoll", fn, args, mesh, force))
+    # it6 = it5 with the Pallas pull kernel, accounted by subtraction
+    w0_cfg = dataclasses.replace(base_cfg, in_ell_width=0)
+    fn, args = build(
+        w0_cfg, EngineConfig(semiring="count", saturate=True, bitmap_collectives=True)
+    )
+    rec_w0 = measure("rpq__aux_width0", fn, args, mesh, force)
+    it3 = recs[-1]
+    B_l = dims["batch"] // 16
+    n_local = ((dims["n_nodes"] // 16 + 127) // 128) * 128
+    pull_bytes_jnp = it3["bytes"] - rec_w0["bytes"]
+    # per hop: F stripe in once + out once (+ idx tile re-read per B-tile,
+    # block_b=8 keeps the stripe inside VMEM at this n_local)
+    block_b = 8
+    kernel_bytes = dims["k"] * (
+        2 * B_l * n_local * 4
+        + (B_l // block_b) * n_local * base_cfg.in_ell_width * 4
+    )
+    it4 = dict(it3)
+    it4["tag"] = "rpq__it6_satcount_pallas(analytic-kernel)"
+    it4["bytes"] = rec_w0["bytes"] + kernel_bytes
+    it4["t_memory"] = it4["bytes"] / HBM_BW
+    it4["pull_bytes_jnp_replaced"] = pull_bytes_jnp
+    it4["bytes_analytic_kernel"] = kernel_bytes
+    with open(os.path.join(PERF_DIR, it4["tag"] + ".json"), "w") as f:
+        json.dump(it4, f, indent=1)
+    recs.append(it4)
+    show(recs)
+    return recs
+
+
+# --------------------------------------------------------------------- #
+# Cell 2: kimi-k2 x train_4k (multi pod) — collective-bound
+
+
+def kimi_variants(force=False):
+    mesh = make_production_mesh(multi_pod=True)
+    spec = get_arch("kimi-k2-1t-a32b")
+    shape = spec.shapes["train_4k"]
+    recs = []
+    # it0: baseline (recorded by the sweep; re-derive here for same-method
+    # comparison at L=2 unrolled so collective counts are not scan-masked)
+    base = dataclasses.replace(
+        spec.make_config(), n_layers=2, scan_layers=False, attn_unroll=True
+    )
+    fn, args = dr.build_lm_cell("kimi-k2-1t-a32b", shape, mesh, cfg_override=base)
+    recs.append(measure("kimi__it0_baseline_L2", fn, args, mesh, force))
+    # it1: fewer routing groups — one group per POD-ROW instead of per DP
+    # shard: groups=16 aligns the (G, Tg, D) view with the 'data' axis only,
+    # removing the pod-axis reshape that triggered XLA's involuntary full
+    # rematerialization (replicate-then-repartition) on dispatch buffers
+    g16 = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, num_groups=16)
+    )
+    fn, args = dr.build_lm_cell("kimi-k2-1t-a32b", shape, mesh, cfg_override=g16)
+    recs.append(measure("kimi__it1_groups16", fn, args, mesh, force))
+    # it2: tighter expert capacity (1.25 -> 1.0): all_to_all payload ∝ C
+    cap1 = dataclasses.replace(
+        g16, moe=dataclasses.replace(g16.moe, capacity_factor=1.0)
+    )
+    fn, args = dr.build_lm_cell("kimi-k2-1t-a32b", shape, mesh, cfg_override=cap1)
+    recs.append(measure("kimi__it2_capacity1.0", fn, args, mesh, force))
+    # it3: explicit MoE activation shardings (groups on DP, experts on EP)
+    # — kills GSPMD's replicate-then-reshard fallback on dispatch buffers
+    sh = dataclasses.replace(
+        base,
+        moe=dataclasses.replace(
+            base.moe, dp_spec=("pod", "data"), ep_axis="model"
+        ),
+    )
+    fn, args = dr.build_lm_cell("kimi-k2-1t-a32b", shape, mesh, cfg_override=sh)
+    recs.append(measure("kimi__it3_moe_shard_constraints", fn, args, mesh, force))
+    # it4: it3 + tighter capacity (payload ∝ C once routing is clean)
+    sh_cap = dataclasses.replace(
+        sh, moe=dataclasses.replace(sh.moe, capacity_factor=1.0)
+    )
+    fn, args = dr.build_lm_cell("kimi-k2-1t-a32b", shape, mesh, cfg_override=sh_cap)
+    recs.append(measure("kimi__it4_constraints_cap1.0", fn, args, mesh, force))
+    show(recs)
+    return recs
+
+
+# --------------------------------------------------------------------- #
+# Cell 3: glm4-9b x train_4k (single pod) — memory-bound
+
+
+def glm4_variants(force=False):
+    mesh = make_production_mesh(multi_pod=False)
+    spec = get_arch("glm4-9b")
+    shape = spec.shapes["train_4k"]
+    recs = []
+    base = dataclasses.replace(
+        spec.make_config(), n_layers=2, scan_layers=False, attn_unroll=True
+    )
+    fn, args = dr.build_lm_cell("glm4-9b", shape, mesh, cfg_override=base)
+    recs.append(measure("glm4__it0_baseline_L2_remat", fn, args, mesh, force))
+    # it1: drop full-layer remat (memory_analysis shows activations fit at
+    # B=256/S=4k on 256 chips) — removes a full forward recompute
+    norem = dataclasses.replace(base, remat=False)
+    fn, args = dr.build_lm_cell("glm4-9b", shape, mesh, cfg_override=norem)
+    recs.append(measure("glm4__it1_no_remat", fn, args, mesh, force))
+    # it2: bigger attention chunks (fewer online-softmax correction passes)
+    chunk = dataclasses.replace(norem, attn_chunk=4096)
+    fn, args = dr.build_lm_cell("glm4-9b", shape, mesh, cfg_override=chunk)
+    recs.append(measure("glm4__it2_attnchunk4096", fn, args, mesh, force))
+    # it3: bf16 attention probabilities (the (B,Sq,H,G,chunk) tensors are
+    # the single largest byte source; f32 row stats + f32 accumulation
+    # preserve the softmax numerics)
+    pbf = dataclasses.replace(norem, attn_p_bf16=True)
+    fn, args = dr.build_lm_cell("glm4-9b", shape, mesh, cfg_override=pbf)
+    recs.append(measure("glm4__it3_attn_p_bf16", fn, args, mesh, force))
+    show(recs)
+    return recs
+
+
+# --------------------------------------------------------------------- #
+# §Perf-1 it7: road-profile RPQ — measured partition structure of
+# roadNet-CA-scale graphs (2 heavy adjacent-band offsets + 13 stray
+# shortcut offsets of ~100 edges/device; see EXPERIMENTS §Perf-1). The
+# dense systolic loop pays per-OFFSET payloads, so stray offsets dominate
+# the wire unless their buckets are column-compressed.
+
+
+def rpq_road_variants(force=False):
+    from repro.configs.moctopus_rpq import RPQConfig, snapshot_stub
+    from repro.core.engine import EngineConfig, MoctopusEngine
+
+    mesh = make_production_mesh(multi_pod=False)
+    Pm = mesh.shape["model"]
+    N, B, k = 1_965_206, 65_536, 3  # roadNet-CA, paper batch
+
+    def build(ecfg):
+        cfg = RPQConfig(name="road", batch=B, k=k, active_offsets=2)
+        snap = snapshot_stub(
+            N, Pm, cfg, avg_degree=3, cross_edge_fraction=0.05,
+            stray_offsets=13, stray_width=128,
+        )
+        eng = MoctopusEngine(snap, ecfg, mesh=mesh, mode="sharded")
+        fn, _ = eng.make_khop_fn(k)
+        n_local = snap.n_local
+        f_in = dr._sds((B, snap.n_pad), jnp.float32, mesh, P("data", "model"))
+        gargs = [
+            dr._sds((Pm, n_local, cfg.in_ell_width), jnp.int32, mesh, P("model")),
+            dr._sds((Pm, snap.hot_dense.shape[1], n_local), jnp.float32, mesh, P("model")),
+            dr._sds((Pm, snap.hot_dense.shape[1]), jnp.int32, mesh, P("model")),
+            dr._sds((Pm, snap.hot_dense.shape[1]), jnp.int32, mesh, P("model")),
+        ]
+        for b in snap.buckets:
+            gargs.append(dr._sds((Pm, b.width), jnp.int32, mesh, P("model")))
+        for b in snap.buckets:
+            gargs.append(dr._sds((Pm, b.width), jnp.int32, mesh, P("model")))
+        return fn, (f_in, *gargs)
+
+    recs = []
+    fn, args = build(EngineConfig(semiring="count", saturate=True,
+                                  bitmap_collectives=True))
+    recs.append(measure("rpqroad__it5_bitmap_only", fn, args, mesh, force))
+    fn, args = build(EngineConfig(semiring="count", saturate=True,
+                                  bitmap_collectives=True,
+                                  compress_small_buckets=True))
+    recs.append(measure("rpqroad__it7_compress_stray", fn, args, mesh, force))
+
+    # it8: sparse-frontier mode (core/sparse_engine.py) — ids ride the
+    # all_to_all, no (B, n_local) buffers at all. Road frontiers stay tiny
+    # (cap=64 suffices at k=3; overflow is counted, tested in
+    # tests/test_sparse_engine.py).
+    import numpy as _np
+
+    from repro.core.sparse_engine import SparseEngineConfig, SparseKhopEngine
+
+    cfg = RPQConfig(name="road", batch=B, k=k, active_offsets=2)
+    snap = snapshot_stub(N, Pm, cfg, avg_degree=3)
+    snap.out_ell = _np.full((Pm, 8, 8), -1, _np.int32)  # stub content
+    sp = SparseKhopEngine(
+        snap, SparseEngineConfig(frontier_cap=64), mesh=mesh, mode="sharded"
+    )
+    sfn = sp.make_khop_fn(k)
+    C = 64
+    ids_in = dr._sds((Pm, B, C), jnp.int32, mesh, P("model", "data"))
+    oe_in = dr._sds((Pm, snap.n_local, 8), jnp.int32, mesh, P("model"))
+    recs.append(measure("rpqroad__it8_sparse_frontier", sfn, (ids_in, oe_in), mesh, force))
+    show(recs)
+    return recs
+
+
+# --------------------------------------------------------------------- #
+# Bonus cell: gcn x ogb_products aggregation — naive row-sharded
+# segment_sum vs the Moctopus-partitioned bridge (core/gnn_bridge.py)
+
+
+def gnn_variants(force=False):
+    from repro.configs.moctopus_rpq import RPQConfig, snapshot_stub
+    from repro.core.gnn_bridge import make_spmm_fn
+    from repro.sparse.segment import segment_sum
+
+    mesh = make_production_mesh(multi_pod=False)
+    N, E, d = 2_449_029, 61_859_140, 100
+    nd = 256
+    Np, Ep = ((N + nd - 1) // nd) * nd, ((E + nd - 1) // nd) * nd
+    recs = []
+
+    # it0: naive — node/edge arrays row-sharded over the whole mesh, one
+    # aggregation = gather + scatter-add (what models/gnn.py does today)
+    rows = ("data", "model")
+
+    def naive_agg(x, es, ed):
+        return segment_sum(x[es], ed, Np)
+
+    args = (
+        dr._sds((Np, d), jnp.float32, mesh, P(rows, None)),
+        dr._sds((Ep,), jnp.int32, mesh, P(rows)),
+        dr._sds((Ep,), jnp.int32, mesh, P(rows)),
+    )
+    recs.append(measure("gnn__it0_naive_segment_sum", naive_agg, args, mesh, force))
+
+    # it1: Moctopus bridge — snapshot stub at ogb scale, 4 active offsets
+    # (scale-free graph after labor division + migration; measured offset
+    # counts from benchmarks/partition_quality.py)
+    Pm = mesh.shape["model"]
+    stub = snapshot_stub(N, Pm, RPQConfig(name="g", active_offsets=4), avg_degree=25)
+    fn, gargs = make_spmm_fn(stub, mesh, d, aggregator="sum")
+    n_local = stub.n_local
+    E_off = max(E // (10 * 4 * Pm), 8)
+    x_in = dr._sds((Pm * n_local, d), jnp.float32, mesh, P("model", None))
+    garg_specs = (
+        dr._sds((Pm, 8, 16), jnp.int32, mesh, P("model")),
+        *[dr._sds((Pm, E_off), jnp.int32, mesh, P("model")) for _ in range(4)],
+        *[dr._sds((Pm, E_off), jnp.int32, mesh, P("model")) for _ in range(4)],
+    )
+    # full-size in_ell spec (stub content is tiny; shapes come from specs)
+    garg_specs = (
+        dr._sds((Pm, n_local, 16), jnp.int32, mesh, P("model")),
+    ) + garg_specs[1:]
+    recs.append(
+        measure(
+            "gnn__it1_moctopus_bridge",
+            lambda x, *g: fn(x, *g),
+            (x_in,) + garg_specs,
+            mesh,
+            force,
+        )
+    )
+    show(recs)
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--cell",
+        default="all",
+        choices=["all", "rpq", "rpqroad", "kimi", "glm4", "gnn"],
+    )
+    ap.add_argument("--force", action="store_true")
+    a = ap.parse_args()
+    if a.cell in ("all", "rpq"):
+        rpq_variants(a.force)
+    if a.cell in ("all", "rpqroad"):
+        rpq_road_variants(a.force)
+    if a.cell in ("all", "kimi"):
+        kimi_variants(a.force)
+    if a.cell in ("all", "glm4"):
+        glm4_variants(a.force)
+    if a.cell in ("all", "gnn"):
+        gnn_variants(a.force)
+
+
+if __name__ == "__main__":
+    main()

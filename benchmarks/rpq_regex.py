@@ -1,0 +1,66 @@
+"""Beyond the paper's k-hop workload: full regular path queries (regex over
+edge labels) through the same engine — concat, alternation, optional, and
+Kleene-star (fixpoint) plans."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.engine import EngineConfig, MoctopusEngine
+from repro.core.partition import MoctopusPartitioner, PartitionConfig
+from repro.core.rpq import compile_rpq
+from repro.core.storage import build_snapshot
+from repro.data.graphs import make_rmat_graph, random_labels
+
+PATTERNS = [
+    "l0 l1",
+    "l0 | l1",
+    "l0 (l1 | l2)",
+    "l0 l1?",
+    "l0 l1*",
+    "(l0 | l1) l2 _",
+]
+
+
+def run(n_nodes: int = 3000, batch: int = 64, P: int = 8):
+    src, dst, n = make_rmat_graph(n_nodes, avg_degree=6, seed=3)
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    lab = random_labels(len(src), 3, seed=3)
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=P))
+    part.on_edges(src, dst)
+    part.migration_pass(src, dst)
+    snap_all = build_snapshot(src, dst, n, part.partition_of, P)
+    by_label = {
+        f"l{i}": build_snapshot(
+            src[lab == i], dst[lab == i], n, part.partition_of, P
+        )
+        for i in range(3)
+    }
+    eng = MoctopusEngine(
+        snap_all,
+        EngineConfig(fixpoint_max_iters=16),
+        mode="simulated",
+        snapshots_by_label=by_label,
+    )
+    rng = np.random.default_rng(4)
+    sources = rng.integers(0, n, batch)
+    rows = []
+    for pat in PATTERNS:
+        plan = compile_rpq(pat)
+        t = timed(lambda: eng.rpq(plan, sources), repeats=2)
+        rows.append(
+            (
+                f"rpq/{pat.replace(' ', '')}",
+                t,
+                f"states={plan.num_states};cyclic={plan.has_cycle}",
+            )
+        )
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

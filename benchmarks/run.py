@@ -1,0 +1,76 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  khop               Fig. 4   k-hop runtime, 3 systems x 15 traces
+  ipc                Fig. 5   IPC bytes, Moctopus vs PIM-hash (+ schedule view)
+  update             Fig. 6   insert/delete 64K-edge batches vs COO rebuild
+  partition_quality  Table 1  degree stats + locality/balance/offsets
+  rpq_regex          (beyond paper) full regex RPQ plans
+  roofline           §Roofline terms from the dry-run artifacts (if present)
+
+Reduced scale by default (CPU container); --full uses larger graphs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger graphs (slow)")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list of: khop,ipc,update,partition,rpq,roofline",
+    )
+    args = ap.parse_args()
+    scale = 20_000 if args.full else 3_000
+    batch = 256 if args.full else 48
+    updates = 65_536 if args.full else 8_192
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    from repro.data.graphs import SNAP_TABLE
+
+    # reduced: 5 traces covering both regimes (road + scale-free); --full: all 15
+    traces = SNAP_TABLE if args.full else [SNAP_TABLE[i] for i in (0, 4, 7, 9, 13)]
+
+    print("name,us_per_call,derived")
+    if want("partition"):
+        from benchmarks import partition_quality
+
+        partition_quality.run(scale_nodes=scale, traces=traces)
+    if want("khop"):
+        from benchmarks import khop
+
+        khop.run(scale_nodes=scale, batch=batch, traces=traces)
+    if want("ipc"):
+        from benchmarks import ipc
+
+        ipc.run(scale_nodes=scale, batch=batch, traces=traces)
+    if want("update"):
+        from benchmarks import update
+
+        # updates need the paper's regime: O(batch) positional writes vs
+        # O(E log E) matrix rebuild — resident graph must dominate the batch
+        # (the speedup grows with resident size; see EXPERIMENTS.md)
+        update.run(scale_nodes=scale * 64, n_updates=updates, traces=traces)
+    if want("rpq"):
+        from benchmarks import rpq_regex
+
+        rpq_regex.run(n_nodes=scale, batch=batch)
+    if want("roofline"):
+        try:
+            from benchmarks import roofline
+
+            roofline.run()
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"roofline/unavailable,0,{type(e).__name__}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Train a GCN end-to-end on a synthetic cora-like task with the full
+substrate: Moctopus partitioning for the graph, AdamW, checkpointing and
+the fault-tolerant loop. Loss must drop; final accuracy is printed.
+
+    PYTHONPATH=src python examples/train_gnn.py [--steps 200]
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, FaultTolerantLoop
+from repro.configs import get_arch
+from repro.models.gnn import gcn_forward, gcn_init
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_task(n=600, d=32, classes=4, seed=0):
+    """Features carry class signal; edges mostly connect same-class nodes
+    (homophily), so the GCN beats a plain MLP by aggregating neighbors."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, n)
+    centers = rng.standard_normal((classes, d)) * 1.0
+    x = centers[y] + rng.standard_normal((n, d)) * 2.0  # noisy features
+    same = rng.integers(0, n, 8 * n)
+    # rewire: pick dst of same class with prob .8
+    dsts = []
+    by_class = [np.nonzero(y == c)[0] for c in range(classes)]
+    for s in same:
+        if rng.random() < 0.8:
+            dsts.append(rng.choice(by_class[y[s]]))
+        else:
+            dsts.append(rng.integers(0, n))
+    dst = np.asarray(dsts)
+    return {
+        "x": jnp.asarray(x, jnp.float32),
+        "edge_src": jnp.asarray(same, jnp.int32),
+        "edge_dst": jnp.asarray(dst, jnp.int32),
+        "labels": jnp.asarray(y, jnp.int32),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_arch("gcn-cora").make_reduced(), d_feat=32, n_classes=4, d_hidden=16
+    )
+    graph = make_task()
+    params = gcn_init(cfg, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=10, total_steps=args.steps, weight_decay=0.0)
+
+    @jax.jit
+    def train_step(state, _batch):
+        params, opt = state
+
+        def loss_fn(p):
+            logits = gcn_forward(cfg, p, graph)
+            oh = jax.nn.one_hot(graph["labels"], cfg.n_classes)
+            return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * oh, axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return (params, opt)
+
+    def accuracy(params):
+        logits = gcn_forward(cfg, params, graph)
+        return float((jnp.argmax(logits, -1) == graph["labels"]).mean())
+
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        loop = FaultTolerantLoop(train_step, lambda s: None, cm, ckpt_every=50)
+        state = (params, adamw_init(params))
+        print(f"initial accuracy: {accuracy(state[0]):.3f}")
+        _, state = loop.run(state, 0, args.steps)
+        acc = accuracy(state[0])
+        print(f"final accuracy after {args.steps} steps: {acc:.3f}")
+        assert acc > 0.7, "GCN failed to learn the homophily task"
+        print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Train a small LM end-to-end: deterministic token stream, AdamW,
+checkpoint/restart fault tolerance — with an injected mid-run failure to
+demonstrate recovery. Defaults are CPU-sized (--preset small trains a
+~13M-param model; --preset tiny for CI).
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 60
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, FaultTolerantLoop
+from repro.data.tokens import TokenStream
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+PRESETS = {
+    "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                 d_ff=128, vocab=512, batch=8, seq=64),
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_head=32,
+                  d_ff=1024, vocab=4096, batch=8, seq=128),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--inject-failure-at", type=int, default=25)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    cfg = TransformerConfig(
+        name=f"lm-{args.preset}",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_head=p["d_head"], d_ff=p["d_ff"],
+        vocab=p["vocab"],
+    )
+    stream = TokenStream(cfg.vocab, p["batch"], p["seq"], seed=0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params")
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
+
+    @jax.jit
+    def jit_step(params, opt, tokens, labels):
+        loss, grads = jax.value_and_grad(
+            lambda q: loss_fn(cfg, q, {"tokens": tokens, "labels": labels})
+        )(params)
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    losses = []
+    injected = {"done": False}
+
+    def step_fn(state, batch):
+        if (
+            not injected["done"]
+            and int(state["step"]) == args.inject_failure_at
+        ):
+            injected["done"] = True
+            raise RuntimeError("injected preemption")
+        params, opt, loss = jit_step(
+            state["params"], state["opt"],
+            jnp.asarray(batch["tokens"]), jnp.asarray(batch["labels"]),
+        )
+        losses.append(float(loss))
+        return {"params": params, "opt": opt, "step": state["step"] + 1}
+
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=3)
+        loop = FaultTolerantLoop(step_fn, stream.batch_at, cm, ckpt_every=10)
+        state = {"params": params, "opt": adamw_init(params), "step": jnp.int32(0)}
+        _, state = loop.run(state, 0, args.steps)
+        first = np.mean(losses[:5])
+        last = np.mean(losses[-5:])
+        print(
+            f"loss: {first:.3f} -> {last:.3f} over {len(losses)} executed steps "
+            f"(recovered failures: {loop.report.failures_recovered})"
+        )
+        assert loop.report.failures_recovered == 1
+        assert last < first, "loss did not improve"
+        print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro: Moctopus-JAX — PIM-style Regular Path Query engine + multi-arch
+training/serving framework on JAX for TPU pods.
+
+Reproduction of: "Accelerating Regular Path Queries over Graph Database with
+Processing-in-Memory" (Ma et al., 2024), adapted from UPMEM PIM to TPU v5e
+(see DESIGN.md for the hardware-adaptation mapping).
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import CheckpointManager  # noqa: F401
+from repro.checkpoint.fault_tolerance import FaultTolerantLoop, StragglerPolicy  # noqa: F401

@@ -1,0 +1,106 @@
+"""Fault-tolerant training loop: restart-on-failure + straggler mitigation.
+
+At 1000+ nodes, SOMETHING is always failing; the loop assumes:
+- step functions may raise (preemption, flaky host, injected test faults);
+  recovery = restore latest checkpoint, rewind the deterministic data
+  stream (batches are a pure function of step), continue;
+- some steps straggle; policy options: 'warn' (record), 'skip' (drop the
+  step — acceptable for SGD), matching the deadline-skip-resync scheme in
+  DESIGN §5. Wall-clock deadlines are measured per step against a rolling
+  median.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+from repro.checkpoint.ckpt import CheckpointManager
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    factor: float = 3.0  # deadline = factor x rolling median
+    window: int = 16
+    action: str = "warn"  # 'warn' | 'skip'
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int = 0
+    failures_recovered: int = 0
+    stragglers: int = 0
+    skipped_steps: int = 0
+    restarts_exhausted: bool = False
+
+
+class FaultTolerantLoop:
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Any], Any],  # (state, batch) -> state
+        data_fn: Callable[[int], Any],  # step -> batch (deterministic!)
+        ckpt: CheckpointManager,
+        ckpt_every: int = 10,
+        max_restarts: int = 5,
+        straggler: Optional[StragglerPolicy] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.straggler = straggler or StragglerPolicy()
+        self.clock = clock
+        self.report = LoopReport()
+        self._durations: list = []
+
+    def _deadline(self) -> float:
+        if not self._durations:
+            return float("inf")
+        window = sorted(self._durations[-self.straggler.window :])
+        med = window[len(window) // 2]
+        return self.straggler.factor * med
+
+    def run(self, state: Any, start_step: int, num_steps: int):
+        """Run to ``start_step + num_steps``; resumes from the latest
+        checkpoint automatically if one is newer than start_step."""
+        latest = self.ckpt.latest_step()
+        step = start_step
+        if latest is not None and latest > start_step:
+            step, state = self.ckpt.restore(state, latest)
+        restarts = 0
+        end = start_step + num_steps
+        while step < end:
+            batch = self.data_fn(step)
+            t0 = self.clock()
+            try:
+                new_state = self.step_fn(state, batch)
+            except Exception:
+                restarts += 1
+                self.report.failures_recovered += 1
+                if restarts > self.max_restarts:
+                    self.report.restarts_exhausted = True
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    step, state = self.ckpt.restore(state, latest)
+                continue
+            dt = self.clock() - t0
+            deadline = self._deadline()
+            if dt > deadline:
+                self.report.stragglers += 1
+                if self.straggler.action == "skip":
+                    # drop the slow step's result; move on (stale-resync)
+                    self.report.skipped_steps += 1
+                    self._durations.append(dt)
+                    step += 1
+                    continue
+            self._durations.append(dt)
+            state = new_state
+            step += 1
+            self.report.steps_run += 1
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        return step, state

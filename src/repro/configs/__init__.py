@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures + the paper's own engine (moctopus-rpq)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec
+
+from repro.configs import (  # noqa: E402
+    dimenet,
+    din,
+    gcn_cora,
+    glm4_9b,
+    kimi_k2_1t_a32b,
+    meshgraphnet,
+    mixtral_8x7b,
+    moctopus_rpq,
+    pna,
+    qwen2_5_3b,
+    stablelm_1_6b,
+)
+
+_ALL = [
+    kimi_k2_1t_a32b.SPEC,
+    mixtral_8x7b.SPEC,
+    qwen2_5_3b.SPEC,
+    stablelm_1_6b.SPEC,
+    glm4_9b.SPEC,
+    gcn_cora.SPEC,
+    pna.SPEC,
+    meshgraphnet.SPEC,
+    dimenet.SPEC,
+    din.SPEC,
+    moctopus_rpq.SPEC,
+]
+
+REGISTRY: Dict[str, ArchSpec] = {s.arch_id: s for s in _ALL}
+ASSIGNED_ARCHS = [s.arch_id for s in _ALL if s.arch_id != "moctopus-rpq"]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[arch_id]

@@ -1,0 +1,145 @@
+"""Config-system base types: ArchSpec + ShapeSpec + input builders.
+
+Every assigned architecture gets one module defining an :class:`ArchSpec`
+with (a) the exact published full config, (b) a reduced smoke config for
+CPU tests, (c) its shape set, (d) input-spec builders usable both for real
+(small) inputs and for ShapeDtypeStruct dry-run stand-ins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode' | 'graph' | 'recsys' | 'rpq'
+    dims: Dict[str, int]
+    skip_reason: Optional[str] = None  # e.g. long_500k on full-attention archs
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str  # 'lm' | 'gnn' | 'recsys' | 'rpq'
+    make_config: Callable[[], Any]  # full published config
+    make_reduced: Callable[[], Any]  # smoke-test config
+    shapes: Dict[str, ShapeSpec]
+    source: str  # citation tag from the assignment
+    technique_note: str = ""  # DESIGN §4 applicability
+
+
+# --------------------------------------------------------------------- #
+# canonical LM shape set (assignment: LM-family transformers)
+
+
+def lm_shapes(full_attention: bool) -> Dict[str, ShapeSpec]:
+    skip = (
+        "pure full-attention arch: 512k decode needs sub-quadratic attention "
+        "(DESIGN §4); run only for SWA/SSM/linear archs"
+        if full_attention
+        else None
+    )
+    return {
+        "train_4k": ShapeSpec("train_4k", "train", {"seq_len": 4096, "batch": 256}),
+        "prefill_32k": ShapeSpec(
+            "prefill_32k", "prefill", {"seq_len": 32768, "batch": 32}
+        ),
+        "decode_32k": ShapeSpec(
+            "decode_32k", "decode", {"seq_len": 32768, "batch": 128}
+        ),
+        "long_500k": ShapeSpec(
+            "long_500k", "decode", {"seq_len": 524288, "batch": 1}, skip_reason=skip
+        ),
+    }
+
+
+GNN_SHAPES: Dict[str, ShapeSpec] = {
+    "full_graph_sm": ShapeSpec(
+        "full_graph_sm",
+        "graph",
+        {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433},
+    ),
+    "minibatch_lg": ShapeSpec(
+        "minibatch_lg",
+        "graph",
+        {
+            "n_nodes": 232_965,
+            "n_edges": 114_615_892,
+            "batch_nodes": 1024,
+            "fanout0": 15,
+            "fanout1": 10,
+            "d_feat": 602,
+        },
+    ),
+    "ogb_products": ShapeSpec(
+        "ogb_products",
+        "graph",
+        {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100},
+    ),
+    "molecule": ShapeSpec(
+        "molecule", "graph", {"n_nodes": 30, "n_edges": 64, "batch": 128}
+    ),
+}
+
+RECSYS_SHAPES: Dict[str, ShapeSpec] = {
+    "train_batch": ShapeSpec("train_batch", "recsys", {"batch": 65_536}),
+    "serve_p99": ShapeSpec("serve_p99", "recsys", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "recsys", {"batch": 262_144}),
+    "retrieval_cand": ShapeSpec(
+        "retrieval_cand", "recsys", {"batch": 1, "n_candidates": 1_000_000}
+    ),
+}
+
+
+# --------------------------------------------------------------------- #
+# input builders (small REAL inputs for smoke tests; the dry-run builds
+# ShapeDtypeStructs with the same shape logic — launch/dryrun.py)
+
+
+def lm_train_batch(cfg, batch: int, seq: int, rng: np.random.Generator):
+    toks = rng.integers(0, cfg.vocab, (batch, seq), dtype=np.int64)
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+
+def gnn_graph_inputs(arch_id: str, n: int, e: int, d: int, rng, n_classes: int = 7):
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    g = {
+        "x": jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+        "edge_src": jnp.asarray(src, jnp.int32),
+        "edge_dst": jnp.asarray(dst, jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, n_classes, n), jnp.int32),
+    }
+    if arch_id == "meshgraphnet":
+        g["edge_attr"] = jnp.asarray(rng.standard_normal((e, 4)), jnp.float32)
+        g["y"] = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    if arch_id == "dimenet":
+        from repro.models.gnn import build_triplets
+
+        g["z"] = jnp.asarray(rng.integers(0, 8, n), jnp.int32)
+        g["pos"] = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+        g["triplets"] = jnp.asarray(
+            build_triplets(src, dst, max_triplets=2 * e), jnp.int32
+        )
+        g["y"] = jnp.asarray(rng.standard_normal((n, 1)), jnp.float32)
+    return g
+
+
+def din_batch(cfg, batch: int, rng):
+    return {
+        "hist_items": jnp.asarray(
+            rng.integers(0, cfg.vocab_items, (batch, cfg.hist_len)), jnp.int32
+        ),
+        "hist_cats": jnp.asarray(
+            rng.integers(0, cfg.vocab_cats, (batch, cfg.hist_len)), jnp.int32
+        ),
+        "target_item": jnp.asarray(rng.integers(0, cfg.vocab_items, batch), jnp.int32),
+        "target_cat": jnp.asarray(rng.integers(0, cfg.vocab_cats, batch), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, batch), jnp.int32),
+    }

@@ -1,0 +1,44 @@
+"""dimenet — directional message passing [arXiv:2003.03123; unverified].
+n_blocks=6, hidden 128, n_bilinear=8, n_spherical=7, n_radial=6.
+
+Triplet budget: large non-molecular shapes cap triplets at 2x edges
+(documented subsample — real DimeNet targets molecular graphs)."""
+
+from repro.configs.base import GNN_SHAPES, ArchSpec
+from repro.models.gnn import DimeNetConfig
+
+
+def make_config() -> DimeNetConfig:
+    return DimeNetConfig(
+        name="dimenet",
+        n_blocks=6,
+        d_hidden=128,
+        n_bilinear=8,
+        n_spherical=7,
+        n_radial=6,
+    )
+
+
+def make_reduced() -> DimeNetConfig:
+    return DimeNetConfig(
+        name="dimenet-reduced",
+        n_blocks=2,
+        d_hidden=16,
+        n_bilinear=4,
+        n_spherical=4,
+        n_radial=3,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="dimenet",
+    family="gnn",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=GNN_SHAPES,
+    source="arXiv:2003.03123; unverified",
+    technique_note=(
+        "triplet gather regime (kernel_taxonomy §GNN): partitioner placement "
+        "still applies to the edge->node scatters; angular basis is dense math."
+    ),
+)

@@ -1,0 +1,45 @@
+"""din — Deep Interest Network [arXiv:1706.06978; paper].
+embed_dim=18, hist seq_len=100, attn MLP 80-40, top MLP 200-80,
+interaction = target attention."""
+
+from repro.configs.base import RECSYS_SHAPES, ArchSpec
+from repro.models.recsys import DINConfig
+
+
+def make_config() -> DINConfig:
+    return DINConfig(
+        name="din",
+        vocab_items=1_000_000,
+        vocab_cats=10_000,
+        embed_dim=18,
+        hist_len=100,
+        attn_mlp=(80, 40),
+        top_mlp=(200, 80),
+    )
+
+
+def make_reduced() -> DINConfig:
+    return DINConfig(
+        name="din-reduced",
+        vocab_items=1000,
+        vocab_cats=50,
+        embed_dim=8,
+        hist_len=10,
+        attn_mlp=(16, 8),
+        top_mlp=(32, 16),
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="din",
+    family="recsys",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=RECSYS_SHAPES,
+    source="arXiv:1706.06978; paper",
+    technique_note=(
+        "PARTIAL fit: hot embedding rows <-> high-degree nodes; labor "
+        "division = hot-row VMEM cache (kernels/embedding_bag) + cold "
+        "vocab-sharded table (DESIGN §4)."
+    ),
+)

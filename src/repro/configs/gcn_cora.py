@@ -1,0 +1,26 @@
+"""gcn-cora — 2-layer GCN, hidden 16 [arXiv:1609.02907; paper]."""
+
+from repro.configs.base import GNN_SHAPES, ArchSpec
+from repro.models.gnn import GCNConfig
+
+
+def make_config() -> GCNConfig:
+    return GCNConfig(name="gcn-cora", d_feat=1433, d_hidden=16, n_layers=2, n_classes=7)
+
+
+def make_reduced() -> GCNConfig:
+    return GCNConfig(name="gcn-reduced", d_feat=32, d_hidden=8, n_layers=2, n_classes=4)
+
+
+SPEC = ArchSpec(
+    arch_id="gcn-cora",
+    family="gnn",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=GNN_SHAPES,
+    source="arXiv:1609.02907; paper",
+    technique_note=(
+        "DIRECT fit: GCN SpMM uses the Moctopus partitioner's node placement "
+        "and degree split (DESIGN §4)."
+    ),
+)

@@ -1,0 +1,45 @@
+"""glm4-9b — dense LM, RoPE + GQA [hf:THUDM/glm-4-9b; hf].
+40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552."""
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="glm4-9b",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        d_head=128,
+        d_ff=13696,
+        vocab=151552,
+        dtype="bfloat16",
+        remat=True,
+    )
+
+
+def make_reduced() -> TransformerConfig:
+    return TransformerConfig(
+        name="glm4-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=128,
+        vocab=256,
+        dtype="float32",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="glm4-9b",
+    family="lm",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=lm_shapes(full_attention=True),
+    source="hf:THUDM/glm-4-9b; hf",
+    technique_note="dense LM: paper technique not applicable (DESIGN §4).",
+)

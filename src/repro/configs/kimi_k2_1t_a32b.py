@@ -1,0 +1,54 @@
+"""kimi-k2-1t-a32b — trillion-param MoE LM [arXiv:2501.kimi2; unverified].
+
+61L d_model=7168 64H (GQA kv=8) d_ff(expert)=2048 vocab=163840,
+MoE 384 experts top-8. Full attention (long_500k skipped, DESIGN §4).
+"""
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="kimi-k2-1t-a32b",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        d_head=112,
+        d_ff=2048,
+        vocab=163840,
+        moe=MoEConfig(num_experts=384, top_k=8, d_expert=2048),
+        dtype="bfloat16",
+        remat=True,
+    )
+
+
+def make_reduced() -> TransformerConfig:
+    return TransformerConfig(
+        name="kimi-k2-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=64,
+        vocab=256,
+        moe=MoEConfig(num_experts=8, top_k=2, d_expert=64),
+        dtype="float32",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="kimi-k2-1t-a32b",
+    family="lm",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=lm_shapes(full_attention=True),
+    source="arXiv:2501.kimi2; unverified",
+    technique_note=(
+        "MoE expert-capacity constraint reuses the paper's 1.05x dynamic "
+        "capacity (DESIGN §4); attention math itself out of scope."
+    ),
+)

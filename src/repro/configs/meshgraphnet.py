@@ -1,0 +1,28 @@
+"""meshgraphnet — 15-step mesh GNN [arXiv:2010.03409; unverified].
+n_layers=15, hidden 128, aggregator sum, mlp_layers=2."""
+
+from repro.configs.base import GNN_SHAPES, ArchSpec
+from repro.models.gnn import MGNConfig
+
+
+def make_config() -> MGNConfig:
+    return MGNConfig(
+        name="meshgraphnet", d_feat=1433, d_edge=4, d_hidden=128, n_layers=15, mlp_layers=2
+    )
+
+
+def make_reduced() -> MGNConfig:
+    return MGNConfig(
+        name="mgn-reduced", d_feat=8, d_edge=4, d_hidden=16, n_layers=3, mlp_layers=2
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="meshgraphnet",
+    family="gnn",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=GNN_SHAPES,
+    source="arXiv:2010.03409; unverified",
+    technique_note="DIRECT fit: edge/node scatter over partitioned buckets.",
+)

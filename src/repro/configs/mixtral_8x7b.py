@@ -1,0 +1,51 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088; hf]. 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000. SWA window 4096 => long_500k decode RUNS (sub-quadratic)."""
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="mixtral-8x7b",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=14336,
+        vocab=32000,
+        window=4096,
+        moe=MoEConfig(num_experts=8, top_k=2, d_expert=14336),
+        dtype="bfloat16",
+        remat=True,
+    )
+
+
+def make_reduced() -> TransformerConfig:
+    return TransformerConfig(
+        name="mixtral-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=128,
+        vocab=256,
+        window=32,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=128),
+        dtype="float32",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="mixtral-8x7b",
+    family="lm",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=lm_shapes(full_attention=False),  # SWA: long_500k runs
+    source="arXiv:2401.04088; hf",
+    technique_note="EP dispatch capacity shares the paper's load-balance logic.",
+)

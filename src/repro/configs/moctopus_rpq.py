@@ -1,0 +1,124 @@
+"""moctopus-rpq — the paper's own system as a dry-run/roofline subject.
+
+Shapes model the paper's workload (batch 64K k-hop queries, §4.1) at two
+scales: a SNAP-scale graph (fits one pod trivially — included because it is
+the paper's regime) and a web-scale graph where partitioning is mandatory
+(the regime the UPMEM 64MB-per-module constraint emulates, DESIGN §2).
+
+The dry-run lowers ``MoctopusEngine.make_khop_fn`` against ShapeDtypeStruct
+stand-ins built by :func:`snapshot_stub` — shape-only snapshots with a
+representative active-offset count (moctopus: few offsets; hash: all P).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ArchSpec, ShapeSpec
+from repro.core.storage import GraphSnapshot, OffsetBucket
+
+
+@dataclasses.dataclass(frozen=True)
+class RPQConfig:
+    name: str
+    k: int = 3
+    batch: int = 65_536
+    in_ell_width: int = 16
+    hot_pad: int = 128
+    active_offsets: int = 4  # moctopus locality: few; hash baseline: P
+    semiring: str = "count"
+
+
+def make_config() -> RPQConfig:
+    return RPQConfig(name="moctopus-rpq")
+
+
+def make_reduced() -> RPQConfig:
+    return RPQConfig(name="moctopus-rpq-reduced", k=2, batch=64, active_offsets=2)
+
+
+RPQ_SHAPES: Dict[str, ShapeSpec] = {
+    "snap_mid": ShapeSpec(
+        # cit-patents-scale (largest SNAP trace in the paper, Table 1)
+        "snap_mid",
+        "rpq",
+        {"n_nodes": 3_774_768, "avg_degree": 8, "batch": 65_536, "k": 3},
+    ),
+    "web_1b": ShapeSpec(
+        # graph >> HBM-per-chip: the regime where partitioning is forced
+        "web_1b",
+        "rpq",
+        {"n_nodes": 268_435_456, "avg_degree": 16, "batch": 65_536, "k": 3},
+    ),
+}
+
+
+def snapshot_stub(
+    n_nodes: int,
+    P: int,
+    cfg: RPQConfig,
+    cross_edge_fraction: float = 0.1,
+    avg_degree: int = 8,
+    stray_offsets: int = 0,
+    stray_width: int = 128,
+) -> GraphSnapshot:
+    """Minimal real snapshot with the right topology metadata; array
+    CONTENTS are tiny/empty — the dry-run lowers with full-size
+    ShapeDtypeStructs, so only shapes/offsets matter here.
+
+    ``stray_offsets``: additional small buckets of width ``stray_width``
+    per device — the measured road-graph profile (a few heavy adjacent-band
+    offsets + many stray shortcut offsets; EXPERIMENTS §Perf-1 it7)."""
+    n_local = -(-n_nodes // P)
+    n_local = ((n_local + 127) // 128) * 128
+    n_off = max(min(cfg.active_offsets, P), 1)
+    cross = int(n_nodes * avg_degree * cross_edge_fraction)
+    e_per_off = max(-(-cross // (n_off * P)), 8)
+    buckets = [
+        OffsetBucket(
+            offset=d,
+            src_local=np.full((P, e_per_off), -1, np.int32),
+            dst_local=np.full((P, e_per_off), -1, np.int32),
+        )
+        for d in range(n_off)
+    ]
+    for j in range(stray_offsets):
+        d = n_off + j
+        if d >= P:
+            break
+        buckets.append(
+            OffsetBucket(
+                offset=d,
+                src_local=np.full((P, stray_width), -1, np.int32),
+                dst_local=np.full((P, stray_width), -1, np.int32),
+            )
+        )
+    return GraphSnapshot(
+        num_nodes=n_nodes,
+        num_partitions=P,
+        n_local=n_local,
+        old_to_new=np.zeros(1, np.int64),
+        new_to_old=np.zeros(1, np.int64),
+        in_ell=np.full((P, 8, cfg.in_ell_width), -1, np.int32),  # stub content
+        buckets=buckets,
+        hot_rows_new=np.zeros(0, np.int64),
+        hot_dense=np.zeros((P, cfg.hot_pad, 8), np.float32),
+        hot_gather_idx=np.full((P, 8), -1, np.int32),
+        hot_gather_pos=np.full((P, 8), -1, np.int32),
+        partition_of=np.zeros(1, np.int64),
+        stats={"stub": True},
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="moctopus-rpq",
+    family="rpq",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=RPQ_SHAPES,
+    source="this paper",
+    technique_note="the contribution itself.",
+)

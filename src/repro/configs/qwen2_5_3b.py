@@ -1,0 +1,47 @@
+"""qwen2.5-3b — dense LM with GQA + QKV bias [hf:Qwen/Qwen2.5-0.5B; hf].
+36L d_model=2048 16H (GQA kv=2) d_ff=11008 vocab=151936."""
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen2.5-3b",
+        n_layers=36,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=2,
+        d_head=128,
+        d_ff=11008,
+        vocab=151936,
+        qkv_bias=True,
+        dtype="bfloat16",
+        remat=True,
+    )
+
+
+def make_reduced() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen2.5-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_head=16,
+        d_ff=128,
+        vocab=256,
+        qkv_bias=True,
+        dtype="float32",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="qwen2.5-3b",
+    family="lm",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=lm_shapes(full_attention=True),
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+    technique_note="dense LM: paper technique not applicable (DESIGN §4).",
+)

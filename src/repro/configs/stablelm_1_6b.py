@@ -1,0 +1,48 @@
+"""stablelm-1.6b — dense LM, MHA (kv=32), partial rotary
+[hf:stabilityai/stablelm-2-1_6b; unverified].
+24L d_model=2048 32H (GQA kv=32) d_ff=5632 vocab=100352."""
+
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="stablelm-1.6b",
+        n_layers=24,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=64,
+        d_ff=5632,
+        vocab=100352,
+        rope_pct=0.25,  # stablelm-2 partial rotary
+        dtype="bfloat16",
+        remat=True,
+    )
+
+
+def make_reduced() -> TransformerConfig:
+    return TransformerConfig(
+        name="stablelm-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_head=16,
+        d_ff=128,
+        vocab=256,
+        rope_pct=0.25,
+        dtype="float32",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="stablelm-1.6b",
+    family="lm",
+    make_config=make_config,
+    make_reduced=make_reduced,
+    shapes=lm_shapes(full_attention=True),
+    source="hf:stabilityai/stablelm-2-1_6b; unverified",
+    technique_note="dense LM: paper technique not applicable (DESIGN §4).",
+)

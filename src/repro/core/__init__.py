@@ -1,0 +1,17 @@
+"""Moctopus core: the paper's contribution.
+
+- semiring.py  : boolean / counting path semirings + uint32 bitmap packing
+- partition.py : PIM-friendly dynamic graph partitioning (labor division,
+                 radical greedy, dynamic capacity, migration)
+- storage.py   : heterogeneous dynamic graph storage (cols_vector +
+                 elem_position_map + free_list_map) and device snapshots
+- rpq.py       : regular path queries -- regex -> NFA -> matrix execution plan
+- engine.py    : batch k-hop / RPQ execution (local, simulated-P, sharded)
+- update.py    : batch edge insertion / deletion pipeline
+- baselines.py : RedisGraph-like single-device engine; PIM-hash partitioning
+"""
+
+from repro.core.partition import MoctopusPartitioner, PartitionConfig  # noqa: F401
+from repro.core.storage import DynamicGraphStore, GraphSnapshot  # noqa: F401
+from repro.core.rpq import compile_rpq, khop_query  # noqa: F401
+from repro.core.engine import MoctopusEngine, EngineConfig  # noqa: F401

@@ -1,0 +1,94 @@
+"""Baselines the paper compares against (§4.1).
+
+- :class:`RedisGraphLike` — a single-device matrix-based engine in the
+  GraphBLAS style RedisGraph uses: adjacency as sorted COO, k-hop as a jitted
+  frontier-matrix product chain on one device (no partitioning, no
+  collectives). Its *update* path rebuilds the sorted edge arrays per batch,
+  which is how a sparse-matrix database pays for mutability.
+- PIM-hash — implemented as :class:`repro.core.partition.PIMHashPartitioner`
+  feeding the SAME Moctopus engine: every node hashed to a module, no labor
+  division, no locality. The comparison isolates the partitioning algorithm,
+  exactly like the paper's PIM-hash contrast system.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RedisGraphLike:
+    """Single-device GraphBLAS-style k-hop engine + COO-rebuild updates."""
+
+    def __init__(self, src=None, dst=None, num_nodes: int = 0):
+        self.num_nodes = int(num_nodes)
+        if src is None:
+            src = np.zeros(0, np.int64)
+            dst = np.zeros(0, np.int64)
+        self.src = np.asarray(src, dtype=np.int64)
+        self.dst = np.asarray(dst, dtype=np.int64)
+        self._canonicalize()
+
+    def _canonicalize(self) -> None:
+        """Sorted-unique COO — the sparse-matrix invariant."""
+        if len(self.src):
+            key = self.src * max(self.num_nodes, 1) + self.dst
+            order = np.argsort(key, kind="stable")
+            key = key[order]
+            keep = np.ones(len(key), dtype=bool)
+            keep[1:] = key[1:] != key[:-1]
+            self.src = self.src[order][keep]
+            self.dst = self.dst[order][keep]
+
+    # -------------------------------------------------------------- #
+    # updates: matrix-style (rebuild the sorted representation per batch)
+
+    def insert_edges(self, src, dst) -> None:
+        self.src = np.concatenate([self.src, np.asarray(src, dtype=np.int64)])
+        self.dst = np.concatenate([self.dst, np.asarray(dst, dtype=np.int64)])
+        m = int(max(self.src.max(initial=-1), self.dst.max(initial=-1)) + 1)
+        self.num_nodes = max(self.num_nodes, m)
+        self._canonicalize()
+
+    def delete_edges(self, src, dst) -> None:
+        if not len(self.src):
+            return
+        key = self.src * self.num_nodes + self.dst
+        drop = np.asarray(src, dtype=np.int64) * self.num_nodes + np.asarray(
+            dst, dtype=np.int64
+        )
+        keep = ~np.isin(key, drop)
+        self.src, self.dst = self.src[keep], self.dst[keep]
+
+    # -------------------------------------------------------------- #
+    # queries
+
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=("k", "saturate"))
+    def _khop_jit(f, src, dst, k: int, saturate: bool):
+        def hop(f):
+            vals = f[:, src]
+            out = jnp.zeros_like(f).at[:, dst].add(vals)
+            return jnp.minimum(out, 1.0) if saturate else out
+
+        for _ in range(k):
+            f = hop(f)
+        return f
+
+    def khop(self, sources, k: int, saturate: bool = True) -> np.ndarray:
+        B = len(sources)
+        f = np.zeros((B, self.num_nodes), dtype=np.float32)
+        f[np.arange(B), np.asarray(sources)] = 1.0
+        if not len(self.src):
+            return f if k == 0 else np.zeros_like(f)
+        out = self._khop_jit(
+            jnp.asarray(f),
+            jnp.asarray(self.src),
+            jnp.asarray(self.dst),
+            k,
+            saturate,
+        )
+        return np.asarray(out)

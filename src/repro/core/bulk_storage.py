@@ -1,0 +1,276 @@
+"""Vectorized heterogeneous graph storage — the PIM-parallel update path.
+
+The paper's update speedup comes from the PIM modules doing edge-retrieval
+and space management *in parallel* while the host only issues positional
+writes (§3.3). The TPU-era analogue of "thousands of wimpy cores probing
+hash buckets" is *vectorized* bulk operations, so this module implements:
+
+- :class:`NumpyHashMap` — open-addressing hash table over flat arrays with
+  BULK insert/get/delete (probe rounds are vectorized across the whole
+  batch; a write-then-reread retry resolves claim races exactly like a CAS
+  loop would on real parallel hardware);
+- :class:`BulkGraphStore` — elem_position_map on that hash map, a pooled
+  ``cols`` array with a free-list *stack* for slot allocation, positional
+  scatter writes.
+
+Semantics are identical to the faithful per-row ``DynamicGraphStore``
+(property-tested against it); per-row contiguity is recovered at snapshot
+time (DESIGN §2, assumption 5).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+SENTINEL = -1
+_EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+_TOMB = np.uint64(0xFFFFFFFFFFFFFFFE)
+
+
+def _mix(x: np.ndarray) -> np.ndarray:
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+class NumpyHashMap:
+    """uint64 key -> int64 val, open addressing, bulk vectorized ops."""
+
+    def __init__(self, capacity_pow2: int = 10):
+        self._init_tables(capacity_pow2)
+
+    def _init_tables(self, pow2: int):
+        self.pow2 = pow2
+        self.cap = 1 << pow2
+        self.mask = np.uint64(self.cap - 1)
+        self.keys = np.full(self.cap, _EMPTY, dtype=np.uint64)
+        self.vals = np.zeros(self.cap, dtype=np.int64)
+        self.size = 0
+        self.used = 0  # live + tombstones
+
+    def _grow_if_needed(self, incoming: int):
+        if (self.used + incoming) * 10 < self.cap * 7:
+            return
+        live = self.keys[(self.keys != _EMPTY) & (self.keys != _TOMB)]
+        vals = self.vals[(self.keys != _EMPTY) & (self.keys != _TOMB)]
+        new_pow2 = self.pow2
+        while (len(live) + incoming) * 10 >= (1 << new_pow2) * 7:
+            new_pow2 += 1
+        self._init_tables(new_pow2)
+        if len(live):
+            self.bulk_insert(live, vals)
+
+    def bulk_get(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized lookup; -1 where missing. keys must be unique-safe
+        (duplicates fine for get)."""
+        keys = keys.astype(np.uint64)
+        n = len(keys)
+        out = np.full(n, -1, dtype=np.int64)
+        if n == 0 or self.size == 0:
+            return out
+        idx = _mix(keys) & self.mask
+        active = np.arange(n)
+        for _ in range(self.cap):
+            cur = self.keys[idx[active]]
+            k = keys[active]
+            hit = cur == k
+            out[active[hit]] = self.vals[idx[active[hit]]]
+            miss_end = cur == _EMPTY  # probe chain ended
+            cont = ~hit & ~miss_end
+            active = active[cont]
+            if len(active) == 0:
+                break
+            idx[active] = (idx[active] + np.uint64(1)) & self.mask
+        return out
+
+    def bulk_insert(self, keys: np.ndarray, vals: np.ndarray) -> np.ndarray:
+        """Insert unique, not-present keys. Returns slot indices used.
+        (Caller dedups and pre-checks with bulk_get — the store does.)"""
+        keys = keys.astype(np.uint64)
+        vals = np.asarray(vals, dtype=np.int64)
+        n = len(keys)
+        if n == 0:
+            return np.zeros(0, np.int64)
+        self._grow_if_needed(n)
+        idx = _mix(keys) & self.mask
+        slots = np.full(n, -1, dtype=np.int64)
+        active = np.arange(n)
+        for _ in range(self.cap):
+            pos = idx[active]
+            cur = self.keys[pos]
+            free = (cur == _EMPTY) | (cur == _TOMB)
+            claim_local = np.nonzero(free)[0]
+            cpos = pos[claim_local]
+            # bulk CAS: when several batch keys target the same free slot,
+            # exactly one wins this round (numpy fancy assignment keeps the
+            # LAST writer; winners = last occurrence per unique slot)
+            rev_uniq_first = np.unique(cpos[::-1], return_index=True)[1]
+            winner_local = claim_local[len(cpos) - 1 - rev_uniq_first]
+            winners = active[winner_local]
+            wpos = pos[winner_local]
+            self.keys[wpos] = keys[winners]
+            self.vals[wpos] = vals[winners]
+            slots[winners] = wpos
+            self.size += len(winners)
+            self.used += len(winners)
+            done = np.zeros(len(active), dtype=bool)
+            done[winner_local] = True
+            active = active[~done]
+            if len(active) == 0:
+                break
+            idx[active] = (idx[active] + np.uint64(1)) & self.mask
+        return slots
+
+    def bulk_delete(self, keys: np.ndarray) -> np.ndarray:
+        """Tombstone present keys; returns their vals (-1 where missing)."""
+        keys = keys.astype(np.uint64)
+        n = len(keys)
+        out = np.full(n, -1, dtype=np.int64)
+        if n == 0 or self.size == 0:
+            return out
+        idx = _mix(keys) & self.mask
+        active = np.arange(n)
+        for _ in range(self.cap):
+            pos = idx[active]
+            cur = self.keys[pos]
+            k = keys[active]
+            hit = cur == k
+            hpos = pos[hit]
+            out[active[hit]] = self.vals[hpos]
+            self.keys[hpos] = _TOMB
+            self.size -= int(hit.sum())
+            ended = cur == _EMPTY
+            cont = ~hit & ~ended
+            active = active[cont]
+            if len(active) == 0:
+                break
+            idx[active] = (idx[active] + np.uint64(1)) & self.mask
+        return out
+
+
+class BulkGraphStore:
+    """Pooled positional edge storage with vectorized batch updates."""
+
+    def __init__(self, initial_capacity: int = 1024):
+        cap = max(initial_capacity, 16)
+        self.pool_cols = np.full(cap, SENTINEL, dtype=np.int64)
+        self.pool_row = np.full(cap, SENTINEL, dtype=np.int64)
+        self.pool_label = np.zeros(cap, dtype=np.int32)
+        self.free = np.arange(cap - 1, -1, -1, dtype=np.int64)  # stack
+        self.n_free = cap
+        self.emap = NumpyHashMap(capacity_pow2=12)
+        self.degree = np.zeros(0, dtype=np.int64)
+        self.num_nodes = 0
+        self.num_edges = 0
+
+    # ------------------------------------------------------------------ #
+    def _grow_pool(self, need: int):
+        cap = len(self.pool_cols)
+        new_cap = cap
+        while self.n_free + (new_cap - cap) < need:
+            new_cap *= 2
+        if new_cap == cap:
+            return
+        for name in ("pool_cols", "pool_row"):
+            arr = getattr(self, name)
+            grown = np.full(new_cap, SENTINEL, dtype=np.int64)
+            grown[:cap] = arr
+            setattr(self, name, grown)
+        lab = np.zeros(new_cap, dtype=np.int32)
+        lab[:cap] = self.pool_label
+        self.pool_label = lab
+        extra = np.arange(new_cap - 1, cap - 1, -1, dtype=np.int64)
+        stack = np.concatenate([self.free[: self.n_free], extra])
+        self.free = stack
+        self.n_free = len(stack)
+
+    def _grow_nodes(self, n: int):
+        if n <= self.num_nodes:
+            return
+        grown = np.zeros(n, dtype=np.int64)
+        grown[: len(self.degree)] = self.degree
+        self.degree = grown
+        self.num_nodes = n
+
+    @staticmethod
+    def _key(u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        return (u.astype(np.uint64) << np.uint64(32)) | v.astype(np.uint64)
+
+    # ------------------------------------------------------------------ #
+    def insert_edges(self, src, dst, labels=None) -> Tuple[int, np.ndarray]:
+        """Vectorized batch insert. Returns (n_new, index-of-new-in-batch)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        labels = (
+            np.zeros(len(src), np.int32) if labels is None else np.asarray(labels)
+        )
+        if len(src) == 0:
+            return 0, np.zeros(0, np.int64)
+        self._grow_nodes(int(max(src.max(), dst.max())) + 1)
+        key = self._key(src, dst)
+        # dedup within batch (keep first occurrence, paper: existence check)
+        uk, first_idx = np.unique(key, return_index=True)
+        # existence check against the map (the "PIM-side" parallel probe)
+        existing = self.emap.bulk_get(uk)
+        new_sel = first_idx[existing < 0]
+        if len(new_sel) == 0:
+            return 0, new_sel
+        ns, nd, nl = src[new_sel], dst[new_sel], labels[new_sel]
+        n_new = len(ns)
+        # slot allocation from the free-list stack
+        if self.n_free < n_new:
+            self._grow_pool(n_new)
+        slots = self.free[self.n_free - n_new : self.n_free][::-1].copy()
+        self.n_free -= n_new
+        # positional writes (the "host-side" cheap phase)
+        self.pool_cols[slots] = nd
+        self.pool_row[slots] = ns
+        self.pool_label[slots] = nl
+        self.emap.bulk_insert(self._key(ns, nd), slots)
+        np.add.at(self.degree, ns, 1)
+        self.num_edges += n_new
+        return n_new, new_sel
+
+    def delete_edges(self, src, dst):
+        """Vectorized batch delete. Returns (n_deleted, deleted_src_rows)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if len(src) == 0:
+            return 0, np.zeros(0, np.int64)
+        key = self._key(src, dst)
+        uk = np.unique(key)
+        pos = self.emap.bulk_delete(uk)
+        hit = pos >= 0
+        hpos = pos[hit]
+        if len(hpos) == 0:
+            return 0, np.zeros(0, np.int64)
+        rows = self.pool_row[hpos]
+        self.pool_cols[hpos] = SENTINEL  # tombstone
+        self.pool_row[hpos] = SENTINEL
+        # push freed slots
+        if self.n_free + len(hpos) > len(self.free):
+            grown = np.zeros(len(self.free) * 2 + len(hpos), dtype=np.int64)
+            grown[: self.n_free] = self.free[: self.n_free]
+            self.free = grown
+        self.free[self.n_free : self.n_free + len(hpos)] = hpos
+        self.n_free += len(hpos)
+        np.subtract.at(self.degree, rows, 1)
+        self.num_edges -= len(hpos)
+        return int(len(hpos)), rows
+
+    # ------------------------------------------------------------------ #
+    def has_edge(self, u: int, v: int) -> bool:
+        return self.emap.bulk_get(self._key(np.array([u]), np.array([v])))[0] >= 0
+
+    def out_degree(self, u: int) -> int:
+        return int(self.degree[u]) if u < self.num_nodes else 0
+
+    def edges(self):
+        live = self.pool_cols != SENTINEL
+        return (
+            self.pool_row[live].copy(),
+            self.pool_cols[live].copy(),
+            self.pool_label[live].copy(),
+        )

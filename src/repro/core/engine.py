@@ -1,0 +1,566 @@
+"""Moctopus batch RPQ / k-hop execution engine.
+
+Execution modes (DESIGN §3):
+
+- ``local``     : single-device dense oracle (numpy) — correctness reference.
+- ``simulated`` : the distributed dataflow executed on one device with the
+                  partition axis materialized (collectives become rolls/
+                  sums). Bit-exact with the sharded path; used for tests,
+                  partition-quality studies and IPC accounting at any P.
+- ``sharded``   : the production path. ``shard_map`` over the (data, model)
+                  mesh; queries sharded over ``data``, graph nodes over
+                  ``model``. One hop =
+                    (a) local pull-ELL expansion          (no comm)
+                    (b) hot dense block on the MXU        (small psum)
+                    (c) systolic offset loop: per ACTIVE partition-offset d,
+                        scatter a partial then ``ppermute`` it d steps around
+                        the ring. Collective bytes scale with the number of
+                        active offsets — which the locality-aware partitioner
+                        minimizes; PIM-hash activates all P offsets.
+
+Semirings (core/semiring.py): ``count`` (f32 path counts, MXU-native);
+``saturate=True`` gives boolean reachability. Cyclic (Kleene) plans force
+saturation — path counts diverge on cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as PSpec
+
+from repro.core.rpq import RPQPlan, WILDCARD
+from repro.core.storage import SENTINEL, GraphSnapshot
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    semiring: str = "count"  # 'count' | 'bool' (bool = saturated count)
+    saturate: bool = True
+    use_pallas: bool = False  # route local pull-ELL through the Pallas kernel
+    data_axis: str = "data"
+    model_axis: str = "model"
+    accum_dtype: str = "float32"  # bool mode supports 'uint8' (4x bytes)
+    fixpoint_max_iters: int = 32  # bound for cyclic (Kleene) plans
+    # beyond-paper (§Perf-1): pack boolean partials into uint32 bitmaps
+    # before cross-partition ppermute — 32x collective payload reduction.
+    # Requires semiring='bool'.
+    bitmap_collectives: bool = False
+    # beyond-paper (§Perf-1 it7): offsets whose edge bucket is small ship
+    # the gathered (B, E_d) source columns instead of a full (B, n_local)
+    # partial — wire ∝ CROSSING EDGES, i.e. exactly the paper's IPC metric.
+    # Real partitioned graphs activate nearly all offsets with a few stray
+    # edges each (measured, EXPERIMENTS §Perf-1), so this is where the
+    # locality win actually lands in dense mode.
+    compress_small_buckets: bool = False
+
+    def __post_init__(self):
+        if self.bitmap_collectives and not (self.semiring == "bool" or self.saturate):
+            raise ValueError(
+                "bitmap_collectives needs boolean answers (bool semiring or "
+                "saturated counts)"
+            )
+        if self.accum_dtype == "uint8" and self.semiring != "bool":
+            raise ValueError("uint8 accumulators require the boolean semiring")
+
+    @property
+    def is_bool(self) -> bool:
+        return self.semiring == "bool"
+
+
+# --------------------------------------------------------------------- #
+# local oracles
+
+
+def khop_local(src, dst, num_nodes, sources, k, saturate=True) -> np.ndarray:
+    """Dense single-device k-hop oracle: counts[b, n] (saturated if asked)."""
+    B = len(sources)
+    F = np.zeros((B, num_nodes), dtype=np.float64)
+    F[np.arange(B), np.asarray(sources)] = 1.0
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    for _ in range(k):
+        nxt = np.zeros_like(F)
+        if len(src):
+            np.add.at(nxt, (slice(None), dst), F[:, src])
+        F = np.minimum(nxt, 1.0) if saturate else nxt
+    return F
+
+
+def rpq_local(plan, edges_by_label, num_nodes, sources, max_iters=None) -> np.ndarray:
+    """Dense single-device RPQ oracle (boolean semiring).
+
+    Matches the engine semantics: acyclic plans run exact dataflow with
+    per-iteration accept accumulation; cyclic plans run monotone closure.
+    """
+    B = len(sources)
+    S = plan.num_states
+    F = np.zeros((S, B, num_nodes), dtype=bool)
+    F[plan.start, np.arange(B), np.asarray(sources)] = True
+    ans = np.zeros((B, num_nodes), dtype=bool)
+    for q in plan.accepts:
+        ans |= F[q]
+    iters = plan.max_hops if not plan.has_cycle else (max_iters or 2 * num_nodes)
+
+    def expand(fq, lab):
+        out = np.zeros_like(fq)
+        keys = list(edges_by_label.keys()) if lab == WILDCARD else [lab]
+        for key in keys:
+            if key not in edges_by_label:
+                continue
+            s, d = edges_by_label[key]
+            if len(s):
+                np.logical_or.at(out, (slice(None), d), fq[:, s])
+        return out
+
+    for _ in range(max(iters, 0)):
+        nxt = (
+            F.copy() if plan.has_cycle else np.zeros_like(F)
+        )  # closure vs strict dataflow
+        for (q, lab, q2) in plan.transitions:
+            nxt[q2] |= expand(F[q], lab)
+        if plan.has_cycle and (nxt == F).all():
+            break
+        F = nxt
+        for q in plan.accepts:
+            ans |= F[q]
+    return ans
+
+
+# --------------------------------------------------------------------- #
+# collective backends
+
+
+class _RealColl:
+    """Inside shard_map: true collectives over the model axis."""
+
+    def __init__(self, axis: str, P: int):
+        self.axis, self.P = axis, P
+
+    def ppermute(self, x, d):
+        perm = [(p, (p + d) % self.P) for p in range(self.P)]
+        return jax.lax.ppermute(x, self.axis, perm)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axis)
+
+
+class _SimColl:
+    """Single-device emulation: arrays carry a leading partition axis."""
+
+    def __init__(self, P: int):
+        self.P = P
+
+    def ppermute(self, x, d):
+        return jnp.roll(x, shift=d, axis=0)
+
+    def psum(self, x):
+        return jnp.broadcast_to(x.sum(axis=0, keepdims=True), x.shape)
+
+
+# --------------------------------------------------------------------- #
+
+
+class MoctopusEngine:
+    """Distributed batch-query engine over a frozen :class:`GraphSnapshot`.
+
+    ``mode='sharded'`` needs a mesh whose model axis has exactly P devices;
+    ``mode='simulated'`` runs the identical dataflow on one device.
+    Multi-label RPQs take ``snapshots_by_label`` (shared renumbering).
+    """
+
+    def __init__(
+        self,
+        snapshot: GraphSnapshot,
+        config: EngineConfig | None = None,
+        mesh: Optional[Mesh] = None,
+        mode: str = "simulated",
+        snapshots_by_label: Optional[Dict[str, GraphSnapshot]] = None,
+    ):
+        self.cfg = config or EngineConfig()
+        self.snap = snapshot
+        self.by_label = snapshots_by_label or {}
+        self.mesh = mesh
+        self.mode = mode
+        self.P = snapshot.num_partitions
+        self.n_local = snapshot.n_local
+        if mode == "sharded":
+            if mesh is None:
+                raise ValueError("sharded mode requires a mesh")
+            msize = mesh.shape[self.cfg.model_axis]
+            if msize != self.P:
+                raise ValueError(
+                    f"snapshot P={self.P} != mesh '{self.cfg.model_axis}' size {msize}"
+                )
+        self.graph_args: Dict[Optional[str], tuple] = {
+            None: self._flatten(snapshot)
+        }
+        for lab, s in self.by_label.items():
+            if s.num_partitions != self.P or s.n_local != self.n_local:
+                raise ValueError("per-label snapshots must share the renumbering")
+            self.graph_args[lab] = self._flatten(s)
+        self.compressed_by = {None: self._compressed(snapshot)}
+        self.compressed_by.update(
+            {lab: self._compressed(s) for lab, s in self.by_label.items()}
+        )
+        self._fn_cache: Dict = {}  # jitted step fns, keyed by (kind, k/plan)
+
+    # ------------------------------------------------------------------ #
+    def _compressed(self, snap: GraphSnapshot) -> tuple:
+        """Static per-bucket decision: ship gathered columns when cheaper
+        than a full partial (wire-dtype aware: bitmap partials are n/32)."""
+        if not self.cfg.compress_small_buckets:
+            return tuple(False for _ in snap.buckets)
+        partial_words = (
+            snap.n_local / 32 if self.cfg.bitmap_collectives else snap.n_local
+        )
+        return tuple(
+            b.offset != 0 and b.width < partial_words for b in snap.buckets
+        )
+
+    def _flatten(self, snap: GraphSnapshot) -> tuple:
+        """Graph arrays as a flat tuple (jit arguments, not baked constants).
+
+        For compressed buckets the dst index array is pre-ROLLED by the
+        offset so the RECEIVER holds the scatter indices of its sender —
+        indices never ride the wire."""
+        dt = jnp.dtype(self.cfg.accum_dtype)
+        comp = self._compressed(snap)
+        dsts = []
+        for b, c in zip(snap.buckets, comp):
+            d = np.roll(b.dst_local, b.offset, axis=0) if c else b.dst_local
+            dsts.append(jnp.asarray(d, dtype=jnp.int32))
+        return (
+            jnp.asarray(snap.in_ell, dtype=jnp.int32),
+            jnp.asarray(snap.hot_dense, dtype=dt),
+            jnp.asarray(snap.hot_gather_idx, dtype=jnp.int32),
+            jnp.asarray(snap.hot_gather_pos, dtype=jnp.int32),
+            *(jnp.asarray(b.src_local, dtype=jnp.int32) for b in snap.buckets),
+            *dsts,
+        )
+
+    @staticmethod
+    def _unflatten(flat: tuple, n_buckets: int) -> dict:
+        return {
+            "in_ell": flat[0],
+            "hot_dense": flat[1],
+            "hot_gather_idx": flat[2],
+            "hot_gather_pos": flat[3],
+            "bucket_src": tuple(flat[4 : 4 + n_buckets]),
+            "bucket_dst": tuple(flat[4 + n_buckets : 4 + 2 * n_buckets]),
+        }
+
+    # ------------------------------------------------------------------ #
+    # per-device hop pieces. In 'sharded' mode f is (B_l, n_local) and graph
+    # arrays have their leading P axis stripped; in 'simulated' mode the P
+    # axis is explicit and ops are vmapped over it.
+
+    def _pull_ell(self, f, in_ell):
+        """out[b, j] = (+|OR)_s f[b, in_ell[j, s]] (sentinel-masked).
+
+        Boolean mode uses max-reduce (OR) so uint8 accumulators can't
+        overflow; count mode sums."""
+        if self.cfg.use_pallas and self.cfg.accum_dtype == "float32":
+            # kernel sums; boolean mode saturates after (sums <= W in f32)
+            from repro.kernels import ops as kops
+
+            out = kops.ell_pull(f, in_ell)
+            return jnp.minimum(out, 1.0) if self.cfg.is_bool else out
+        combine = jnp.maximum if self.cfg.is_bool else jnp.add
+        out = jnp.zeros_like(f)
+        for s in range(in_ell.shape[-1]):
+            idx = in_ell[:, s]
+            valid = idx != SENTINEL
+            vals = f[:, jnp.where(valid, idx, 0)]
+            out = combine(out, jnp.where(valid[None, :], vals, 0))
+        return out
+
+    def _bucket_partial(self, f, src, dst):
+        valid = src != SENTINEL
+        s = jnp.where(valid, src, 0)
+        d = jnp.where(valid, dst, 0)
+        vals = jnp.where(valid[None, :], f[:, s], 0)
+        if self.cfg.is_bool:  # OR-scatter: overflow-free for narrow dtypes
+            return jnp.zeros_like(f).at[:, d].max(vals)
+        return jnp.zeros_like(f).at[:, d].add(vals)
+
+    def _gather_cols(self, f, src):
+        valid = src != SENTINEL
+        return jnp.where(valid[None, :], f[:, jnp.where(valid, src, 0)], 0)
+
+    def _scatter_cols(self, f, dst, vals):
+        valid = dst != SENTINEL
+        d = jnp.where(valid, dst, 0)
+        vals = jnp.where(valid[None, :], vals, 0)
+        if self.cfg.is_bool:
+            return jnp.zeros_like(f).at[:, d].max(vals)
+        return jnp.zeros_like(f).at[:, d].add(vals)
+
+    def _hot_gather(self, f, hot_idx, hot_pos, h_pad):
+        valid = hot_idx != SENTINEL
+        cols = jnp.where(valid, hot_idx, 0)
+        pos = jnp.where(valid, hot_pos, 0)
+        vals = jnp.where(valid[None, :], f[:, cols], 0)  # (B, Hmax)
+        return jnp.zeros((f.shape[0], h_pad), f.dtype).at[:, pos].add(vals)
+
+    def _hop(self, f, arrs, offsets, coll, sim: bool):
+        """One smxm hop. sharded: f (B_l, n_local); simulated: f (P, B, n_local)."""
+        from repro.core.semiring import pack_bits, unpack_bits
+
+        bool_mode = self.cfg.is_bool
+        combine = jnp.maximum if bool_mode else jnp.add
+        pull = jax.vmap(self._pull_ell) if sim else self._pull_ell
+        bucket = jax.vmap(self._bucket_partial) if sim else self._bucket_partial
+        out = pull(f, arrs["in_ell"])
+        h_pad = arrs["hot_dense"].shape[-2]
+        if h_pad > 0:
+            if sim:
+                fh = jax.vmap(self._hot_gather, in_axes=(0, 0, 0, None))(
+                    f, arrs["hot_gather_idx"], arrs["hot_gather_pos"], h_pad
+                )
+                fh = coll.psum(fh)  # (P, B, H_pad) replicated over P
+                hot = jnp.einsum(
+                    "pbh,phn->pbn",
+                    fh.astype(arrs["hot_dense"].dtype),
+                    arrs["hot_dense"],
+                )
+            else:
+                fh = self._hot_gather(
+                    f, arrs["hot_gather_idx"], arrs["hot_gather_pos"], h_pad
+                )
+                fh = coll.psum(fh)  # (B_l, H_pad)
+                hot = fh.astype(arrs["hot_dense"].dtype) @ arrs["hot_dense"]  # MXU
+            if bool_mode:
+                hot = (hot > 0).astype(f.dtype)
+            out = combine(out, hot.astype(f.dtype))
+        n_local = f.shape[-1]
+        compressed = arrs.get("compressed", tuple(False for _ in offsets))
+        gather = jax.vmap(self._gather_cols) if sim else self._gather_cols
+        scatter = jax.vmap(self._scatter_cols) if sim else self._scatter_cols
+        for i, d in enumerate(offsets):
+            if compressed[i]:
+                # §Perf-1 it7: wire carries only the (B, E_d) gathered
+                # columns — bytes ∝ crossing edges (the paper's IPC unit);
+                # receiver scatters with its pre-rolled dst indices
+                vals = gather(f, arrs["bucket_src"][i])
+                vals = coll.ppermute(vals, d)
+                partial = scatter(f, arrs["bucket_dst"][i], vals)
+                out = combine(out, partial)
+                continue
+            partial = bucket(f, arrs["bucket_src"][i], arrs["bucket_dst"][i])
+            if d != 0:
+                if self.cfg.bitmap_collectives:
+                    # §Perf-1: ship 1 bit per (query, node) instead of a
+                    # full accumulator word — 32x less ICI payload
+                    packed = pack_bits(partial)
+                    packed = coll.ppermute(packed, d)
+                    partial = unpack_bits(packed, n_local).astype(f.dtype)
+                else:
+                    partial = coll.ppermute(partial, d)
+            out = combine(out, partial)
+        if self.cfg.saturate or bool_mode:
+            out = jnp.minimum(out, jnp.asarray(1, f.dtype))
+        return out
+
+    # ------------------------------------------------------------------ #
+    # jit-able entry points
+
+    def make_khop_fn(self, k: int):
+        """Returns (fn, graph_args): fn(frontier, *graph_args) -> frontier.
+
+        sharded: frontier (B, N_pad) sharded (data, model).
+        simulated: frontier (P, B, n_local).
+        """
+        if ("khop", k) in self._fn_cache:
+            return self._fn_cache[("khop", k)], self.graph_args[None]
+        offsets = self.snap.active_offsets
+        nb = len(offsets)
+        gargs = self.graph_args[None]
+
+        if self.mode == "simulated":
+            coll = _SimColl(self.P)
+
+            def fn(f, *flat):
+                arrs = self._unflatten(flat, nb)
+                arrs["compressed"] = self.compressed_by[None]
+                for _ in range(k):
+                    f = self._hop(f, arrs, offsets, coll, sim=True)
+                return f
+
+            jitted = jax.jit(fn)
+            self._fn_cache[("khop", k)] = jitted
+            return jitted, gargs
+
+        coll = _RealColl(self.cfg.model_axis, self.P)
+        da, ma = self.cfg.data_axis, self.cfg.model_axis
+
+        def device_fn(f, *flat):
+            flat = tuple(x[0] for x in flat)  # strip sharded P axis
+            arrs = self._unflatten(flat, nb)
+            arrs["compressed"] = self.compressed_by[None]
+            for _ in range(k):
+                f = self._hop(f, arrs, offsets, coll, sim=False)
+            return f
+
+        fn = jax.shard_map(
+            device_fn,
+            mesh=self.mesh,
+            in_specs=(PSpec(da, ma),) + tuple(PSpec(ma) for _ in gargs),
+            out_specs=PSpec(da, ma),
+            check_vma=False,
+        )
+        jitted = jax.jit(fn)
+        self._fn_cache[("khop", k)] = jitted
+        return jitted, gargs
+
+    def make_rpq_fn(self, plan: RPQPlan):
+        """Returns (fn, flat_args): fn(frontier, *flat_args) -> ans frontier."""
+        if plan.has_cycle and not (self.cfg.saturate or self.cfg.semiring == "bool"):
+            raise ValueError("cyclic RPQ plans require the boolean/saturated semiring")
+        S = plan.num_states
+        iters = plan.max_hops if not plan.has_cycle else self.cfg.fixpoint_max_iters
+        needed = {lab for (_, lab, _) in plan.transitions}
+        for lab in needed:
+            if lab != WILDCARD and lab not in self.graph_args:
+                raise KeyError(f"no snapshot for label {lab!r}")
+        labels_sorted = [None] + sorted(self.by_label.keys())
+        offsets_by = {None: self.snap.active_offsets}
+        offsets_by.update({lab: s.active_offsets for lab, s in self.by_label.items()})
+        sizes = {lab: len(self.graph_args[lab]) for lab in labels_sorted}
+        flat_args = tuple(
+            x for lab in labels_sorted for x in self.graph_args[lab]
+        )
+        sim = self.mode == "simulated"
+        coll = _SimColl(self.P) if sim else _RealColl(self.cfg.model_axis, self.P)
+
+        def run(f0, *flat):
+            arrs_by = {}
+            i = 0
+            for lab in labels_sorted:
+                n = sizes[lab]
+                nb = len(offsets_by[lab])
+                arrs_by[lab] = self._unflatten(flat[i : i + n], nb)
+                arrs_by[lab]["compressed"] = self.compressed_by[lab]
+                i += n
+
+            def step(fs_stack):
+                """One automaton sweep: stacked (S, ...) frontier -> next."""
+                base = fs_stack if plan.has_cycle else jnp.zeros_like(fs_stack)
+                nxt = base
+                for (q, lab, q2) in plan.transitions:
+                    key = None if lab == WILDCARD else lab
+                    nxt = nxt.at[q2].add(
+                        self._hop(fs_stack[q], arrs_by[key], offsets_by[key], coll, sim)
+                    )
+                if self.cfg.saturate or self.cfg.semiring == "bool":
+                    nxt = jnp.minimum(nxt, 1.0)
+                return nxt
+
+            def accept_sum(fs_stack, ans):
+                for q in plan.accepts:
+                    ans = ans + fs_stack[q]
+                return ans
+
+            fs = jnp.zeros((S,) + f0.shape, f0.dtype).at[plan.start].set(f0)
+            ans = accept_sum(fs, jnp.zeros_like(f0))
+            if plan.has_cycle:
+                # monotone boolean closure: while_loop with convergence exit
+                def cond(state):
+                    _, _, it, changed = state
+                    return jnp.logical_and(it < iters, changed)
+
+                def body(state):
+                    fs, ans, it, _ = state
+                    nxt = step(fs)
+                    changed = jnp.any(nxt != fs)
+                    return nxt, accept_sum(nxt, ans), it + 1, changed
+
+                fs, ans, _, _ = jax.lax.while_loop(
+                    cond, body, (fs, ans, jnp.int32(0), jnp.bool_(True))
+                )
+            else:
+                for _ in range(max(iters, 0)):  # exact dataflow, small unroll
+                    fs = step(fs)
+                    ans = accept_sum(fs, ans)
+            return jnp.minimum(ans, 1.0) if self.cfg.saturate else ans
+
+        if sim:
+            return jax.jit(run), flat_args
+
+        da, ma = self.cfg.data_axis, self.cfg.model_axis
+
+        def device_fn(f0, *flat):
+            return run(f0, *(x[0] for x in flat))
+
+        fn = jax.shard_map(
+            device_fn,
+            mesh=self.mesh,
+            in_specs=(PSpec(da, ma),) + tuple(PSpec(ma) for _ in flat_args),
+            out_specs=PSpec(da, ma),
+            check_vma=False,
+        )
+        return jax.jit(fn), flat_args
+
+    # ------------------------------------------------------------------ #
+    # frontier helpers + high-level drivers
+
+    def initial_frontier(self, sources_old_ids: np.ndarray) -> jnp.ndarray:
+        new_ids = self.snap.old_to_new[np.asarray(sources_old_ids)]
+        B = len(new_ids)
+        f = np.zeros((B, self.snap.n_pad), dtype=self.cfg.accum_dtype)
+        f[np.arange(B), new_ids] = 1.0
+        if self.mode == "simulated":
+            f = f.reshape(B, self.P, self.n_local).transpose(1, 0, 2)
+            return jnp.asarray(f)
+        arr = jnp.asarray(f)
+        if self.mesh is not None:
+            da, ma = self.cfg.data_axis, self.cfg.model_axis
+            arr = jax.device_put(arr, NamedSharding(self.mesh, PSpec(da, ma)))
+        return arr
+
+    def _to_old_ids(self, out: np.ndarray) -> np.ndarray:
+        if self.mode == "simulated":  # (P, B, n_local) -> (B, N_pad)
+            out = out.transpose(1, 0, 2).reshape(out.shape[1], self.snap.n_pad)
+        res = np.zeros((out.shape[0], self.snap.num_nodes), dtype=out.dtype)
+        live = self.snap.new_to_old >= 0
+        res[:, self.snap.new_to_old[live]] = out[:, live]
+        return res
+
+    def khop(self, sources_old_ids: np.ndarray, k: int) -> np.ndarray:
+        fn, gargs = self.make_khop_fn(k)
+        f = self.initial_frontier(sources_old_ids)
+        ctx = self.mesh if (self.mesh is not None and self.mode == "sharded") else None
+        if ctx is not None:
+            with ctx:
+                out = np.asarray(fn(f, *gargs))
+        else:
+            out = np.asarray(fn(f, *gargs))
+        return self._to_old_ids(out)
+
+    def rpq(self, plan: RPQPlan, sources_old_ids: np.ndarray) -> np.ndarray:
+        fn, fargs = self.make_rpq_fn(plan)
+        f = self.initial_frontier(sources_old_ids)
+        ctx = self.mesh if (self.mesh is not None and self.mode == "sharded") else None
+        if ctx is not None:
+            with ctx:
+                out = np.asarray(fn(f, *fargs))
+        else:
+            out = np.asarray(fn(f, *fargs))
+        return self._to_old_ids(out)
+
+    # ------------------------------------------------------------------ #
+    # analytics (the paper's IPC metric, Fig. 5)
+
+    def ipc_bytes_per_hop(self, batch: int) -> int:
+        """Collective payload of one hop: ppermute partials + hot psum."""
+        itemsize = jnp.dtype(self.cfg.accum_dtype).itemsize
+        cross = [d for d in self.snap.active_offsets if d != 0]
+        ppermute_bytes = len(cross) * batch * self.n_local * itemsize
+        h_pad = self.snap.hot_dense.shape[1]
+        psum_bytes = 2 * batch * h_pad * itemsize if h_pad else 0
+        return ppermute_bytes + psum_bytes

@@ -1,0 +1,122 @@
+"""Moctopus partitioning applied to GNN message passing (DESIGN §4).
+
+The engine's ``smxm`` hop moves scalar frontier mass; a GNN layer moves
+d-wide feature rows over the SAME adjacency. This bridge reuses a
+:class:`GraphSnapshot`'s layout — local pull-ELL + offset-bucketed cross
+edges + hot dense rows — to aggregate neighbor features with per-offset
+``ppermute`` instead of the naive row-sharded segment_sum (whose scatter
+lowers to full all-reduces; see the collective-bound GNN rows in
+experiments/roofline.md).
+
+``spmm_features``: out[j] = reduce_{i -> j} x[i]  (sum or mean), with
+x (n_local, d) per device, sharded over the model axis.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.storage import SENTINEL, GraphSnapshot
+
+
+def _pull_rows(x, in_ell):
+    """out[j] = sum_s x[in_ell[j, s]]  — x (n_local, d), in_ell (n_local, W)."""
+    out = jnp.zeros_like(x)
+    cnt = jnp.zeros((x.shape[0], 1), x.dtype)
+    for s in range(in_ell.shape[-1]):
+        idx = in_ell[:, s]
+        valid = idx != SENTINEL
+        rows = x[jnp.where(valid, idx, 0)]
+        out = out + jnp.where(valid[:, None], rows, 0)
+        cnt = cnt + valid[:, None].astype(x.dtype)
+    return out, cnt
+
+
+def _bucket_rows(x, src, dst, n_local):
+    valid = src != SENTINEL
+    s = jnp.where(valid, src, 0)
+    d = jnp.where(valid, dst, 0)
+    rows = jnp.where(valid[:, None], x[s], 0)
+    out = jnp.zeros((n_local, x.shape[1]), x.dtype).at[d].add(rows)
+    cnt = (
+        jnp.zeros((n_local, 1), x.dtype)
+        .at[d]
+        .add(valid[:, None].astype(x.dtype))
+    )
+    return out, cnt
+
+
+def make_spmm_fn(
+    snap: GraphSnapshot,
+    mesh,
+    d_feat: int,
+    aggregator: str = "sum",
+    model_axis: str = "model",
+):
+    """Build fn(x (P*n_local, d), *graph_args) -> aggregated (P*n_local, d),
+    a shard_map over the model axis using the snapshot's offset schedule."""
+    from jax.sharding import PartitionSpec as PSpec
+
+    P = snap.num_partitions
+    offsets = snap.active_offsets
+    nb = len(offsets)
+    gargs = (
+        jnp.asarray(snap.in_ell, jnp.int32),
+        *(jnp.asarray(b.src_local, jnp.int32) for b in snap.buckets),
+        *(jnp.asarray(b.dst_local, jnp.int32) for b in snap.buckets),
+    )
+
+    def device_fn(x, in_ell, *buckets):
+        x = x  # (n_local, d) on this device
+        in_ell = in_ell[0]
+        bsrc = tuple(b[0] for b in buckets[:nb])
+        bdst = tuple(b[0] for b in buckets[nb:])
+        out, cnt = _pull_rows(x, in_ell)
+        for i, d in enumerate(offsets):
+            po, pc = _bucket_rows(x, bsrc[i], bdst[i], x.shape[0])
+            if d != 0:
+                perm = [(p, (p + d) % P) for p in range(P)]
+                po = jax.lax.ppermute(po, model_axis, perm)
+                pc = jax.lax.ppermute(pc, model_axis, perm)
+            out = out + po
+            cnt = cnt + pc
+        if aggregator == "mean":
+            out = out / jnp.maximum(cnt, 1)
+        return out
+
+    fn = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(PSpec(model_axis, None),)
+        + (PSpec(model_axis),) * (1 + 2 * nb),
+        out_specs=PSpec(model_axis, None),
+        check_vma=False,
+    )
+    return fn, gargs
+
+
+def spmm_features_sim(x, snap: GraphSnapshot, aggregator: str = "sum"):
+    """Single-device reference of the partitioned SpMM (P axis explicit).
+
+    x: (P*n_local, d) in snapshot new-id order. Used by tests to check the
+    bridge against a plain segment_sum oracle.
+    """
+    P, n_local = snap.num_partitions, snap.n_local
+    xs = x.reshape(P, n_local, -1)
+    in_ell = jnp.asarray(snap.in_ell, jnp.int32)
+    outs, cnts = jax.vmap(_pull_rows)(xs, in_ell)
+    for b in snap.buckets:
+        po, pc = jax.vmap(_bucket_rows, in_axes=(0, 0, 0, None))(
+            xs, jnp.asarray(b.src_local), jnp.asarray(b.dst_local), n_local
+        )
+        if b.offset != 0:
+            po = jnp.roll(po, b.offset, axis=0)
+            pc = jnp.roll(pc, b.offset, axis=0)
+        outs = outs + po
+        cnts = cnts + pc
+    if aggregator == "mean":
+        outs = outs / jnp.maximum(cnts, 1)
+    return outs.reshape(P * n_local, -1)

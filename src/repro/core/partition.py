@@ -1,0 +1,350 @@
+"""PIM-friendly dynamic graph partitioning (paper §3.2).
+
+Three mechanisms, reproduced faithfully:
+
+1. **Labor division** (§3.2.1): nodes whose out-degree exceeds
+   ``high_degree_threshold`` (paper: 16) are migrated to the *host side*
+   (on TPU: the dense/warm tiers, DESIGN §2). PIM modules only ever hold
+   low-degree rows, so skew-induced load imbalance dissipates.
+2. **Radical greedy heuristic** (§3.2.2): a node is assigned to the
+   partition housing its *first* neighbor (not the majority neighbor —
+   that would cost a scan over up to hundreds of modules). Incorrect
+   placements are tolerated and repaired later by migration.
+3. **Dynamic capacity constraint**: 1.05x the mean assigned-node count.
+   A partition at capacity rejects new nodes; the node is hashed into the
+   below-capacity set instead.
+
+The adaptive half (migration) detects incorrectly partitioned nodes —
+those with most neighbors elsewhere — and moves them to their majority
+partition, capacity permitting.
+
+This module is host-side numpy on purpose: partitioning is the data
+management plane (the paper runs it on the host CPU too); the result is a
+placement vector consumed by the device compute plane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+HOST = -2  # labor-division: node lives on the host side (dense/warm tiers)
+UNASSIGNED = -1
+
+
+@dataclasses.dataclass
+class PartitionConfig:
+    num_partitions: int
+    high_degree_threshold: int = 16  # tau, paper §4.1: out-degree > 16
+    capacity_factor: float = 1.05  # paper §3.2.2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_partitions < 1:
+            raise ValueError("num_partitions must be >= 1")
+        if self.capacity_factor < 1.0:
+            raise ValueError("capacity_factor must be >= 1.0")
+
+
+def _hash_partition(node_ids: np.ndarray, num_partitions: int, seed: int) -> np.ndarray:
+    """Deterministic splitmix-style hash — the PIM-hash baseline uses this too."""
+    x = node_ids.astype(np.uint64) + np.uint64(seed * 0x9E3779B97F4A7C15 + 1)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x % np.uint64(num_partitions)).astype(np.int64)
+
+
+class MoctopusPartitioner:
+    """Streaming partitioner maintaining the ``node_partitioning_vector``."""
+
+    def __init__(self, num_nodes: int, config: PartitionConfig):
+        self.config = config
+        self.num_nodes = num_nodes
+        self.partition_of = np.full(num_nodes, UNASSIGNED, dtype=np.int64)
+        self.out_degree = np.zeros(num_nodes, dtype=np.int64)
+        self.counts = np.zeros(config.num_partitions, dtype=np.int64)
+        self.n_assigned_pim = 0
+        self.stats = {
+            "greedy_hits": 0,  # placed by radical greedy
+            "hash_fallbacks": 0,  # placed by capacity/no-neighbor hash
+            "host_promotions": 0,  # labor-division migrations to host
+            "migrations": 0,  # adaptive locality migrations
+        }
+
+    # ------------------------------------------------------------------ #
+    # capacity
+
+    def capacity(self) -> float:
+        """Dynamic capacity constraint: 1.05x mean assigned count (>= 1)."""
+        p = self.config.num_partitions
+        mean = max(self.n_assigned_pim / p, 1.0)
+        return self.config.capacity_factor * mean
+
+    def _below_capacity(self) -> np.ndarray:
+        return np.nonzero(self.counts < self.capacity())[0]
+
+    # ------------------------------------------------------------------ #
+    # assignment
+
+    def _assign_one(self, node: int, first_neighbor: int) -> int:
+        """Radical greedy: follow the first neighbor; hash on miss/capacity."""
+        cap = self.capacity()
+        target = -1
+        fn_part = self.partition_of[first_neighbor] if first_neighbor >= 0 else UNASSIGNED
+        if fn_part >= 0 and self.counts[fn_part] < cap:
+            target = int(fn_part)
+            self.stats["greedy_hits"] += 1
+        else:
+            below = np.nonzero(self.counts < cap)[0]
+            if len(below) == 0:  # degenerate: everything at capacity
+                below = np.arange(self.config.num_partitions)
+            h = _hash_partition(np.array([node]), len(below), self.config.seed)[0]
+            target = int(below[h])
+            self.stats["hash_fallbacks"] += 1
+        self.partition_of[node] = target
+        self.counts[target] += 1
+        self.n_assigned_pim += 1
+        return target
+
+    def _bulk_assign(self, nodes: np.ndarray, partners: np.ndarray) -> None:
+        """Vectorized radical greedy for large batches.
+
+        Semantics match the sequential heuristic up to intra-batch capacity
+        ordering: the dynamic capacity bound is enforced against the
+        END-of-batch mean (so the invariant counts <= 1.05*mean + 1 holds),
+        greedy followers beyond a partition's room overflow to the hash
+        fallback, and new->new chains run through the exact sequential path.
+        """
+        P = self.config.num_partitions
+        total_after = self.n_assigned_pim + len(nodes)
+        cap = max(self.config.capacity_factor * total_after / P, 1.0)
+
+        def overflow_fill(left: np.ndarray) -> None:
+            room2 = np.maximum(int(np.floor(cap)) - self.counts, 0)
+            slots = np.repeat(np.arange(P), room2)
+            if len(slots) >= len(left):
+                # round-robin over the free-slot list keeps the bound exact
+                tgt = slots[np.arange(len(left)) % len(slots)]
+            else:  # everything at capacity: plain hash (degenerate case)
+                tgt = _hash_partition(left, P, self.config.seed)
+            self.partition_of[left] = tgt
+            self.counts += np.bincount(tgt, minlength=P)
+            self.n_assigned_pim += len(left)
+            self.stats["hash_fallbacks"] += int(len(left))
+
+        # chains resolve progressively: a new node whose first neighbor is
+        # also new becomes 'ready' once the neighbor lands in an earlier
+        # round. A few rounds cover all acyclic chains; cyclic leftovers
+        # (A->B->A) take the hash fallback.
+        for _round in range(4):
+            if len(nodes) == 0:
+                break
+            fp = self.partition_of[partners]
+            ready = fp >= 0
+            if not ready.any():
+                break
+            g_nodes, want = nodes[ready], fp[ready]
+            room = np.maximum(int(np.floor(cap)) - self.counts, 0)
+            order = np.argsort(want, kind="stable")
+            w_s, n_s = want[order], g_nodes[order]
+            pos_in_p = np.arange(len(w_s)) - np.searchsorted(w_s, w_s)
+            accept = pos_in_p < room[w_s]
+            acc_n, acc_p = n_s[accept], w_s[accept]
+            self.partition_of[acc_n] = acc_p
+            self.counts += np.bincount(acc_p, minlength=P)
+            self.n_assigned_pim += len(acc_n)
+            self.stats["greedy_hits"] += int(len(acc_n))
+            overflow = n_s[~accept]
+            if len(overflow):
+                overflow_fill(overflow)
+            nodes, partners = nodes[~ready], partners[~ready]
+        if len(nodes):  # cyclic chains / hosts-only neighborhoods
+            still = self.partition_of[nodes] == UNASSIGNED
+            if still.any():
+                overflow_fill(nodes[still])
+
+    def _grow(self, n: int) -> None:
+        if n <= self.num_nodes:
+            return
+        extra = n - self.num_nodes
+        self.partition_of = np.concatenate(
+            [self.partition_of, np.full(extra, UNASSIGNED, dtype=np.int64)]
+        )
+        self.out_degree = np.concatenate([self.out_degree, np.zeros(extra, np.int64)])
+        self.num_nodes = n
+
+    def on_edges(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Stream a batch of inserted edges through the Graph Partitioner.
+
+        New endpoints are assigned in order of first appearance (the radical
+        greedy decision is made on the *first* edge that mentions a node,
+        matching the paper's "assignment upon inserting the first edge").
+        Degree growth then drives labor-division host promotion.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if len(src) == 0:
+            return
+        self._grow(int(max(src.max(), dst.max())) + 1)
+
+        # order of first appearance over the interleaved endpoint stream
+        stream = np.empty(2 * len(src), dtype=np.int64)
+        stream[0::2] = src
+        stream[1::2] = dst
+        partner = np.empty_like(stream)
+        partner[0::2] = dst
+        partner[1::2] = src
+        # vectorized first-appearance detection; only genuinely-new nodes
+        # take the (order-dependent) radical-greedy loop
+        mask_new = self.partition_of[stream] == UNASSIGNED
+        if mask_new.any():
+            pos = np.nonzero(mask_new)[0]
+            uniq, first = np.unique(stream[pos], return_index=True)
+            order = np.argsort(first)  # appearance order
+            nodes = uniq[order]
+            firsts = pos[first[order]]
+            if len(nodes) > 512:
+                # bulk path: nodes whose first neighbor is ALREADY placed
+                # have order-independent greedy targets -> vectorize; only
+                # chains (first neighbor itself new) stay sequential
+                self._bulk_assign(nodes, partner[firsts])
+            else:
+                # assign in appearance order so a node's first neighbor may
+                # already have been placed by an earlier edge of the batch
+                for node, i in zip(nodes, firsts):
+                    self._assign_one(int(node), int(partner[i]))
+
+        # degree update + labor division (Node Migrator -> host side)
+        np.add.at(self.out_degree, src, 1)
+        self._promote_high_degree(np.unique(src))
+
+    def _promote_high_degree(self, candidates: np.ndarray) -> None:
+        tau = self.config.high_degree_threshold
+        hot = candidates[
+            (self.out_degree[candidates] > tau)
+            & (self.partition_of[candidates] >= 0)
+        ]
+        for node in hot:
+            p = self.partition_of[node]
+            self.counts[p] -= 1
+            self.n_assigned_pim -= 1
+            self.partition_of[node] = HOST
+            self.stats["host_promotions"] += 1
+
+    # ------------------------------------------------------------------ #
+    # adaptive migration (paper: "enhance locality by migration")
+
+    def migration_pass(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        nodes: np.ndarray | None = None,
+        max_moves: int | None = None,
+    ) -> int:
+        """Move incorrectly partitioned nodes to their majority partition.
+
+        ``nodes``: optional subset detected during path matching (the engine
+        reports nodes that missed most next-hops locally); default scans all.
+        Returns the number of migrations performed.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        # undirected neighbor multiset, PIM-side only
+        u = np.concatenate([src, dst])
+        v = np.concatenate([dst, src])
+        pu = self.partition_of[u]
+        pv = self.partition_of[v]
+        keep = (pu >= 0) & (pv >= 0)
+        u, v, pv = u[keep], v[keep], pv[keep]
+        if nodes is not None:
+            sel = np.zeros(self.num_nodes, dtype=bool)
+            sel[nodes] = True
+            m = sel[u]
+            u, pv = u[m], pv[m]
+        if len(u) == 0:
+            return 0
+        # majority neighbor partition per node via sort + run-length count
+        key = u * (self.config.num_partitions + 1) + pv
+        order = np.argsort(key, kind="stable")
+        key_s, u_s, pv_s = key[order], u[order], pv[order]
+        boundary = np.ones(len(key_s), dtype=bool)
+        boundary[1:] = key_s[1:] != key_s[:-1]
+        starts = np.nonzero(boundary)[0]
+        run_len = np.diff(np.append(starts, len(key_s)))
+        run_node = u_s[starts]
+        run_part = pv_s[starts]
+        # argmax per node over its runs
+        best = {}
+        for node, part, cnt in zip(run_node, run_part, run_len):
+            cur = best.get(int(node))
+            if cur is None or cnt > cur[1]:
+                best[int(node)] = (int(part), int(cnt))
+        moved = 0
+        cap = self.capacity()
+        for node, (part, _cnt) in best.items():
+            cur = self.partition_of[node]
+            if cur == part or cur < 0:
+                continue
+            if self.counts[part] >= cap:
+                continue
+            self.counts[cur] -= 1
+            self.counts[part] += 1
+            self.partition_of[node] = part
+            self.stats["migrations"] += 1
+            moved += 1
+            if max_moves is not None and moved >= max_moves:
+                break
+        return moved
+
+    # ------------------------------------------------------------------ #
+    # metrics
+
+    def load_balance(self) -> float:
+        """max/mean assigned-node count across PIM modules (1.0 = perfect)."""
+        if self.n_assigned_pim == 0:
+            return 1.0
+        mean = self.counts.mean()
+        return float(self.counts.max() / max(mean, 1e-9))
+
+    def edge_locality(self, src: np.ndarray, dst: np.ndarray) -> float:
+        """Fraction of PIM-side edges whose endpoints share a partition."""
+        ps = self.partition_of[np.asarray(src)]
+        pd = self.partition_of[np.asarray(dst)]
+        pim = (ps >= 0) & (pd >= 0)
+        if pim.sum() == 0:
+            return 1.0
+        return float((ps[pim] == pd[pim]).mean())
+
+    def crossing_edges(self, src: np.ndarray, dst: np.ndarray) -> int:
+        """Number of PIM->PIM edges crossing partitions (the IPC source)."""
+        ps = self.partition_of[np.asarray(src)]
+        pd = self.partition_of[np.asarray(dst)]
+        pim = (ps >= 0) & (pd >= 0)
+        return int((ps[pim] != pd[pim]).sum())
+
+
+class PIMHashPartitioner(MoctopusPartitioner):
+    """The widely-used hash-partition baseline (paper §2.1, §4.1).
+
+    Every node — regardless of degree — is hashed to a PIM module. No labor
+    division, no greedy placement, no migration.
+    """
+
+    def on_edges(self, src: np.ndarray, dst: np.ndarray) -> None:
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if len(src) == 0:
+            return
+        self._grow(int(max(src.max(), dst.max())) + 1)
+        nodes = np.unique(np.concatenate([src, dst]))
+        new = nodes[self.partition_of[nodes] == UNASSIGNED]
+        parts = _hash_partition(new, self.config.num_partitions, self.config.seed)
+        self.partition_of[new] = parts
+        np.add.at(self.counts, parts, 1)
+        self.n_assigned_pim += len(new)
+        np.add.at(self.out_degree, src, 1)
+
+    def migration_pass(self, *a, **k) -> int:  # hash baseline never migrates
+        return 0

@@ -1,0 +1,290 @@
+"""Regular path queries: regex over edge labels -> NFA -> matrix plan.
+
+The paper's Query Processor translates an RPQ into ``smxm`` (path-matching
+matrix product) and ``mwait`` (reduction) operators. Here the full pipeline
+is implemented: a regex over the edge-label alphabet is parsed (concat by
+juxtaposition or '/', alternation '|', grouping, postfix '*', '+', '?'),
+compiled via Thompson construction, epsilon-eliminated, and emitted as an
+:class:`RPQPlan` — per NFA transition (q, label, q'), one ``smxm`` with the
+label's adjacency; acyclic plans unroll, cyclic plans run to fixpoint.
+
+``khop_query(k)`` builds the paper's evaluation workload: the k-hop path
+query = wildcard^k (paper §4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Sequence, Tuple
+
+WILDCARD = "_"  # matches any label
+
+
+# --------------------------------------------------------------------- #
+# tokenize / parse (recursive descent: alt -> concat -> postfix -> atom)
+
+
+def _tokenize(pattern: str) -> List[str]:
+    tokens: List[str] = []
+    i = 0
+    while i < len(pattern):
+        c = pattern[i]
+        if c.isspace() or c == "/":
+            i += 1
+            continue
+        if c in "()|*+?":
+            tokens.append(c)
+            i += 1
+            continue
+        if c.isalnum() or c in "_-<>":
+            j = i
+            while j < len(pattern) and (pattern[j].isalnum() or pattern[j] in "_-<>"):
+                j += 1
+            tokens.append(pattern[i:j])
+            i = j
+            continue
+        raise ValueError(f"bad character {c!r} in RPQ pattern {pattern!r}")
+    return tokens
+
+
+class _Parser:
+    def __init__(self, tokens: List[str]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self):
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def eat(self, tok=None):
+        t = self.peek()
+        if t is None or (tok is not None and t != tok):
+            raise ValueError(f"RPQ parse error at token {self.i}: expected {tok}, got {t}")
+        self.i += 1
+        return t
+
+    def parse(self):
+        node = self.alt()
+        if self.peek() is not None:
+            raise ValueError(f"trailing tokens in RPQ: {self.toks[self.i:]}")
+        return node
+
+    def alt(self):
+        left = self.concat()
+        while self.peek() == "|":
+            self.eat("|")
+            left = ("alt", left, self.concat())
+        return left
+
+    def concat(self):
+        parts = [self.postfix()]
+        while self.peek() is not None and self.peek() not in ")|":
+            parts.append(self.postfix())
+        node = parts[0]
+        for p in parts[1:]:
+            node = ("cat", node, p)
+        return node
+
+    def postfix(self):
+        node = self.atom()
+        while self.peek() in ("*", "+", "?"):
+            op = self.eat()
+            node = ({"*": "star", "+": "plus", "?": "opt"}[op], node)
+        return node
+
+    def atom(self):
+        t = self.peek()
+        if t == "(":
+            self.eat("(")
+            node = self.alt()
+            self.eat(")")
+            return node
+        if t is None or t in ")|*+?":
+            raise ValueError(f"RPQ parse error: unexpected {t!r}")
+        self.eat()
+        return ("sym", t)
+
+
+# --------------------------------------------------------------------- #
+# Thompson NFA
+
+
+class _NFA:
+    def __init__(self):
+        self.eps: Dict[int, List[int]] = {}
+        self.trans: List[Tuple[int, str, int]] = []
+        self.n = 0
+
+    def new_state(self) -> int:
+        s = self.n
+        self.n += 1
+        self.eps[s] = []
+        return s
+
+    def add_eps(self, a: int, b: int) -> None:
+        self.eps[a].append(b)
+
+    def build(self, node) -> Tuple[int, int]:
+        kind = node[0]
+        if kind == "sym":
+            a, b = self.new_state(), self.new_state()
+            self.trans.append((a, node[1], b))
+            return a, b
+        if kind == "cat":
+            a1, b1 = self.build(node[1])
+            a2, b2 = self.build(node[2])
+            self.add_eps(b1, a2)
+            return a1, b2
+        if kind == "alt":
+            a1, b1 = self.build(node[1])
+            a2, b2 = self.build(node[2])
+            s, t = self.new_state(), self.new_state()
+            self.add_eps(s, a1)
+            self.add_eps(s, a2)
+            self.add_eps(b1, t)
+            self.add_eps(b2, t)
+            return s, t
+        if kind == "star":
+            a, b = self.build(node[1])
+            s, t = self.new_state(), self.new_state()
+            self.add_eps(s, a)
+            self.add_eps(s, t)
+            self.add_eps(b, a)
+            self.add_eps(b, t)
+            return s, t
+        if kind == "plus":
+            a, b = self.build(node[1])
+            t = self.new_state()
+            self.add_eps(b, a)
+            self.add_eps(b, t)
+            return a, t
+        if kind == "opt":
+            a, b = self.build(node[1])
+            s, t = self.new_state(), self.new_state()
+            self.add_eps(s, a)
+            self.add_eps(s, t)
+            self.add_eps(b, t)
+            return s, t
+        raise AssertionError(kind)
+
+    def eps_closure(self, states) -> FrozenSet[int]:
+        seen = set(states)
+        stack = list(states)
+        while stack:
+            s = stack.pop()
+            for t in self.eps[s]:
+                if t not in seen:
+                    seen.add(t)
+                    stack.append(t)
+        return frozenset(seen)
+
+
+@dataclasses.dataclass(frozen=True)
+class RPQPlan:
+    """Epsilon-free automaton, ready for matrix execution.
+
+    transitions: (src_state, label, dst_state) — each is one ``smxm``
+    against the label's adjacency snapshot per iteration.
+    """
+
+    pattern: str
+    num_states: int
+    start: int
+    accepts: Tuple[int, ...]
+    transitions: Tuple[Tuple[int, str, int], ...]
+    has_cycle: bool
+    max_hops: int  # unroll depth for acyclic; iteration bound hint for cyclic
+
+    @property
+    def labels(self) -> Tuple[str, ...]:
+        return tuple(sorted({lab for _, lab, _ in self.transitions}))
+
+
+def compile_rpq(pattern: str, max_hops: int = 64) -> RPQPlan:
+    """Compile an RPQ regex into an epsilon-free transition plan."""
+    ast = _Parser(_tokenize(pattern)).parse()
+    nfa = _NFA()
+    start, accept = nfa.build(ast)
+
+    # epsilon elimination on the transition-endpoint state set
+    closure = {s: nfa.eps_closure([s]) for s in range(nfa.n)}
+    # keep states that are transition sources/targets or start
+    trans: List[Tuple[int, str, int]] = []
+    for (a, lab, b) in nfa.trans:
+        # a fires if reachable via eps from any predecessor's closure: handled
+        # by rewriting sources: any state s with a in closure(s) can fire it.
+        trans.append((a, lab, b))
+    # state renaming: compact used states
+    used = {start}
+    for a, _, b in trans:
+        used.add(a)
+        used.add(b)
+    # expand transitions across eps closures: (s -> a) eps means s fires a's out-edges
+    expanded: set = set()
+    for s in range(nfa.n):
+        cl = closure[s]
+        for (a, lab, b) in trans:
+            if a in cl:
+                expanded.add((s, lab, b))
+    accepts = {s for s in range(nfa.n) if accept in closure[s]}
+    # prune states unreachable from start (cheap BFS over expanded graph)
+    adj: Dict[int, List[Tuple[str, int]]] = {}
+    for (a, lab, b) in expanded:
+        adj.setdefault(a, []).append((lab, b))
+    reach = {start}
+    stack = [start]
+    while stack:
+        s = stack.pop()
+        for _, b in adj.get(s, []):
+            if b not in reach:
+                reach.add(b)
+                stack.append(b)
+    final_trans = sorted(
+        (a, lab, b) for (a, lab, b) in expanded if a in reach and b in reach
+    )
+    states = sorted(reach)
+    rename = {s: i for i, s in enumerate(states)}
+    final = tuple((rename[a], lab, rename[b]) for a, lab, b in final_trans)
+    final_accepts = tuple(sorted(rename[s] for s in accepts if s in reach))
+
+    # cycle detection (DFS) to choose unroll vs fixpoint
+    graph: Dict[int, List[int]] = {}
+    for a, _, b in final:
+        graph.setdefault(a, []).append(b)
+    color = {}
+
+    def has_cycle_from(u) -> bool:
+        color[u] = 1
+        for v in graph.get(u, []):
+            c = color.get(v, 0)
+            if c == 1:
+                return True
+            if c == 0 and has_cycle_from(v):
+                return True
+        color[u] = 2
+        return False
+
+    cyc = any(has_cycle_from(s) for s in range(len(states)) if color.get(s, 0) == 0)
+    if not cyc:
+        # longest path = exact unroll depth
+        import functools
+
+        @functools.lru_cache(maxsize=None)
+        def depth(u: int) -> int:
+            return max((1 + depth(v) for v in graph.get(u, [])), default=0)
+
+        max_hops = max((depth(s) for s in range(len(states))), default=0)
+    return RPQPlan(
+        pattern=pattern,
+        num_states=len(states),
+        start=rename[start],
+        accepts=final_accepts,
+        transitions=final,
+        has_cycle=cyc,
+        max_hops=max_hops,
+    )
+
+
+def khop_query(k: int) -> RPQPlan:
+    """The paper's evaluation workload: k-hop path query (wildcard^k)."""
+    pattern = " ".join([WILDCARD] * k)
+    return compile_rpq(pattern)

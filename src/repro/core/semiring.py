@@ -1,0 +1,76 @@
+"""Path semirings and uint32 bitmap packing.
+
+The paper's ``smxm`` operator is a boolean sparse-matrix x matrix product.
+Two executions (DESIGN §2, assumption 4):
+
+- COUNT semiring (f32/bf16 on the MXU): out = F @ A with ordinary +/*.
+  Counts the number of matched paths; boolean reachability is recovered by
+  saturating after each hop. MXU-native.
+- BOOLEAN semiring over packed uint32 bitmaps (VPU bitwise AND/OR): 32
+  reachability bits per lane word; 32x smaller frontier payloads for
+  collectives. Executed by kernels/bitmap_spmm.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+
+
+def packed_width(n: int) -> int:
+    return (n + WORD - 1) // WORD
+
+
+def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack boolean-ish (..., N) into uint32 (..., ceil(N/32)).
+
+    Bit b of word w corresponds to column w*32+b (little-endian bit order).
+    """
+    n = x.shape[-1]
+    w = packed_width(n)
+    pad = w * WORD - n
+    xb = (x != 0).astype(jnp.uint32)
+    if pad:
+        xb = jnp.pad(xb, [(0, 0)] * (xb.ndim - 1) + [(0, pad)])
+    xb = xb.reshape(xb.shape[:-1] + (w, WORD))
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return (xb << shifts).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(p: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Unpack uint32 (..., W) to boolean (..., n)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(p.shape[:-1] + (p.shape[-1] * WORD,))
+    return flat[..., :n].astype(jnp.bool_)
+
+
+def pack_bits_np(x: np.ndarray) -> np.ndarray:
+    n = x.shape[-1]
+    w = packed_width(n)
+    pad = w * WORD - n
+    xb = (x != 0).astype(np.uint32)
+    if pad:
+        xb = np.pad(xb, [(0, 0)] * (xb.ndim - 1) + [(0, pad)])
+    xb = xb.reshape(xb.shape[:-1] + (w, WORD))
+    shifts = np.arange(WORD, dtype=np.uint32)
+    return (xb << shifts).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_bits_np(p: np.ndarray, n: int) -> np.ndarray:
+    shifts = np.arange(WORD, dtype=np.uint32)
+    bits = (p[..., None] >> shifts) & np.uint32(1)
+    flat = bits.reshape(p.shape[:-1] + (p.shape[-1] * WORD,))
+    return flat[..., :n].astype(bool)
+
+
+def saturate(x: jnp.ndarray, cap: float = 1.0) -> jnp.ndarray:
+    """Count -> boolean saturation (keeps the frontier in {0, cap})."""
+    return jnp.minimum(x, cap)
+
+
+def bool_matmul_ref(f: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Boolean semiring reference: (B, K) x (K, N) -> (B, N), unpacked."""
+    return (f.astype(jnp.float32) @ a.astype(jnp.float32)) > 0

@@ -1,0 +1,9 @@
+"""Data pipelines: synthetic graphs shaped like the paper's SNAP suite,
+LM token streams, and recsys batch synthesis."""
+
+from repro.data.graphs import (  # noqa: F401
+    SNAP_TABLE,
+    make_rmat_graph,
+    make_road_graph,
+    make_snap_like,
+)

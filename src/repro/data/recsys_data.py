@@ -1,0 +1,41 @@
+"""Synthetic DIN batches with a head/tail (hot/cold) item distribution —
+the skew the labor-division embedding cache exploits (DESIGN §4)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def zipf_ids(rng, vocab: int, size, a: float = 1.2) -> np.ndarray:
+    z = rng.zipf(a, size=size)
+    return (z % vocab).astype(np.int64)
+
+
+def din_batch_at(cfg, batch: int, step: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng((seed << 18) ^ step)
+    items = zipf_ids(rng, cfg.vocab_items, (batch, cfg.hist_len))
+    cats = items % cfg.vocab_cats
+    target = zipf_ids(rng, cfg.vocab_items, batch)
+    # clicks correlate with history overlap => learnable signal
+    overlap = (items == target[:, None]).any(axis=1)
+    label = (overlap | (rng.random(batch) < 0.2)).astype(np.int64)
+    return {
+        "hist_items": items.astype(np.int32),
+        "hist_cats": cats.astype(np.int32),
+        "target_item": target.astype(np.int32),
+        "target_cat": (target % cfg.vocab_cats).astype(np.int32),
+        "label": label.astype(np.int32),
+    }
+
+
+def hot_row_stats(ids: np.ndarray, vocab: int, top_k: int) -> dict:
+    """Fraction of lookups served by the top_k hottest rows (cache hit rate
+    the labor division would achieve)."""
+    counts = np.bincount(ids.reshape(-1), minlength=vocab)
+    order = np.argsort(counts)[::-1]
+    hot = counts[order[:top_k]].sum()
+    return {
+        "total": int(counts.sum()),
+        "hot_hits": int(hot),
+        "hit_rate": float(hot / max(counts.sum(), 1)),
+    }

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, collectives, compression, pipeline
+parallelism, elastic rescaling."""

@@ -1,0 +1,80 @@
+"""Elastic rescaling: the paper's migration machinery IS the rescale path.
+
+When the PIM-module / device count changes (node joins or failures drop a
+slice), the node->partition vector is remapped proportionally and the same
+adaptive migration that repairs radical-greedy mistakes repairs rescale
+locality. Only the delta set moves — no full re-shuffle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partition import HOST, MoctopusPartitioner, PartitionConfig
+
+
+@dataclasses.dataclass
+class RescaleReport:
+    old_P: int
+    new_P: int
+    moved_nodes: int
+    locality_before: float
+    locality_after: float
+    load_balance_after: float
+
+
+def rescale(
+    part: MoctopusPartitioner,
+    new_P: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    migration_rounds: int = 2,
+) -> tuple[MoctopusPartitioner, RescaleReport]:
+    """Build a new_P-way partitioner from an existing one.
+
+    Proportional remap keeps contiguity (old partition p maps onto the new
+    range [p*new_P/P, (p+1)*new_P/P)), then migration repairs locality and
+    the dynamic capacity constraint repairs balance.
+    """
+    old_P = part.config.num_partitions
+    loc_before = part.edge_locality(src, dst)
+    cfg = PartitionConfig(
+        num_partitions=new_P,
+        high_degree_threshold=part.config.high_degree_threshold,
+        capacity_factor=part.config.capacity_factor,
+        seed=part.config.seed,
+    )
+    newp = MoctopusPartitioner(part.num_nodes, cfg)
+    newp.out_degree = part.out_degree.copy()
+    old_vec = part.partition_of
+    new_vec = np.full_like(old_vec, -1)
+    pim = old_vec >= 0
+    if new_P >= old_P and new_P % old_P == 0:
+        # grow: split each old partition round-robin across its children so
+        # children stay balanced (contiguity within children preserved by
+        # the subsequent migration pass)
+        ratio = new_P // old_P
+        for p in range(old_P):
+            idx = np.nonzero(old_vec == p)[0]
+            new_vec[idx] = p * ratio + (np.arange(len(idx)) % ratio)
+    else:
+        # shrink / ragged: proportional contiguous remap (children merge)
+        new_vec[pim] = (old_vec[pim] * new_P) // old_P
+    new_vec[old_vec == HOST] = HOST
+    moved = int((new_vec[pim] != old_vec[pim]).sum()) if new_P != old_P else 0
+    newp.partition_of = new_vec
+    newp.counts = np.bincount(new_vec[new_vec >= 0], minlength=new_P).astype(np.int64)
+    newp.n_assigned_pim = int(pim.sum())
+    for _ in range(migration_rounds):
+        moved += newp.migration_pass(src, dst)
+    report = RescaleReport(
+        old_P=old_P,
+        new_P=new_P,
+        moved_nodes=moved,
+        locality_before=loc_before,
+        locality_after=newp.edge_locality(src, dst),
+        load_balance_after=newp.load_balance(),
+    )
+    return newp, report

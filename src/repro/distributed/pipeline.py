@@ -1,0 +1,63 @@
+"""GPipe-style pipeline parallelism over a mesh axis (default: 'pod').
+
+The LM configs can place layer blocks on pipeline stages; microbatches
+stream through with ``collective_permute`` between neighbors. The schedule
+is the classic fill-drain: T = M + S - 1 ticks for M microbatches over S
+stages (bubble fraction (S-1)/T). Stages execute the SAME program (SPMD);
+stage identity comes from ``lax.axis_index``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def gpipe_forward(
+    stage_fn: Callable,
+    stage_params,
+    microbatches: jnp.ndarray,
+    axis: str,
+    n_stages: int,
+):
+    """Run (M, mb, ...) microbatches through S pipeline stages.
+
+    Inside shard_map over ``axis``: ``stage_params`` is this device's stage
+    slice; stage 0 injects microbatches, stage S-1 collects outputs.
+    Returns (M, mb, ...) outputs (valid on the LAST stage; other stages
+    hold zeros — callers psum/select as needed).
+    """
+    M = microbatches.shape[0]
+    S = n_stages
+    me = jax.lax.axis_index(axis)
+    fwd_perm = [(p, p + 1) for p in range(S - 1)]
+    buf = jnp.zeros_like(microbatches[0])
+    outs = jnp.zeros_like(microbatches)
+    for t in range(M + S - 1):  # static fill-drain schedule
+        x_in = jnp.where(me == 0, microbatches[min(t, M - 1)], buf)
+        y = stage_fn(stage_params, x_in)
+        mi = t - (S - 1)  # microbatch finishing at the last stage this tick
+        if 0 <= mi < M:
+            outs = outs.at[mi].set(jnp.where(me == S - 1, y, outs[mi]))
+        buf = jax.lax.ppermute(y, axis, fwd_perm)
+    return outs
+
+
+def pipeline_loss(
+    stage_fn: Callable,
+    loss_tail: Callable,
+    stage_params,
+    microbatches,
+    labels,
+    axis: str,
+    n_stages: int,
+):
+    """Forward through the pipeline then a loss on the last stage; psum so
+    every stage reports the same scalar (grads flow through ppermute)."""
+    outs = gpipe_forward(stage_fn, stage_params, microbatches, axis, n_stages)
+    me = jax.lax.axis_index(axis)
+    loss = loss_tail(outs, labels)
+    loss = jnp.where(me == n_stages - 1, loss, 0.0)
+    return jax.lax.psum(loss, axis)

@@ -1,0 +1,206 @@
+"""Per-family sharding rules: params, optimizer state (ZeRO), and inputs.
+
+Parallelism map (DESIGN §5):
+- DP  : batch over ('pod', 'data')
+- TP  : attention heads / FFN hidden / vocab over 'model' (Megatron style)
+- EP  : experts over 'model' when E divides it, else expert-FFN dim (TP-in-EP)
+- SP  : decode KV caches sequence-sharded over 'model' (and 'data' when B=1)
+- ZeRO: optimizer m/v additionally sharded over 'data' on the largest
+        still-unsharded divisible dim
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+# --------------------------------------------------------------------- #
+# LM params
+
+
+def lm_param_specs(cfg, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec tree matching models.transformer.init_params."""
+    m = _axis_size(mesh, "model")
+    layers: Dict[str, P] = {
+        "ln1": P(),
+        "ln2": P(),
+        "wq": P(None, None, "model"),
+        "wk": P(None, None, "model"),
+        "wv": P(None, None, "model"),
+        "wo": P(None, "model", None),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = P(None, "model")
+        layers["bk"] = P(None, "model")
+        layers["bv"] = P(None, "model")
+    if cfg.moe:
+        layers["router"] = P()
+        if cfg.moe.num_experts % m == 0:
+            ep = P(None, "model", None, None)  # experts over model (EP)
+            layers.update({"we1": ep, "we3": ep, "we2": ep})
+        else:  # TP inside experts (e.g. mixtral E=8 on model=16)
+            layers["we1"] = P(None, None, None, "model")
+            layers["we3"] = P(None, None, None, "model")
+            layers["we2"] = P(None, None, "model", None)
+    else:
+        layers["w1"] = P(None, None, "model")
+        layers["w3"] = P(None, None, "model")
+        layers["w2"] = P(None, "model", None)
+    # kv projections: shard by whole KV heads only (GQA: kv heads < model
+    # size would fragment head dims) -> replicate when not divisible
+    if cfg.n_kv_heads % m != 0:
+        layers["wk"] = P()
+        layers["wv"] = P()
+        if cfg.qkv_bias:
+            layers["bk"] = P()
+            layers["bv"] = P()
+    return {
+        "embed": P("model", None) if cfg.vocab % m == 0 else P(),
+        "layers": layers,
+        "ln_f": P(),
+        "lm_head": P(None, "model") if cfg.vocab % m == 0 else P(),
+    }
+
+
+def zero_opt_specs(param_specs, param_shapes, mesh: Mesh):
+    """ZeRO-1: shard optimizer moments over 'data' on a free divisible dim."""
+    d = _axis_size(mesh, "data")
+
+    def one(spec: P, shape) -> P:
+        if d == 1:
+            return spec
+        parts = list(spec) + [None] * (len(shape.shape) - len(spec))
+        # choose the largest unsharded dim divisible by the data size
+        best, best_dim = None, -1
+        for i, (s, sz) in enumerate(zip(parts, shape.shape)):
+            if s is None and sz % d == 0 and sz > best_dim:
+                best, best_dim = i, sz
+        if best is None:
+            return spec
+        parts[best] = "data"
+        return P(*parts)
+
+    return jax.tree.map(one, param_specs, param_shapes)
+
+
+def opt_state_specs(param_specs, param_shapes, mesh: Mesh):
+    """Specs for AdamWState(step, m, v)."""
+    zs = zero_opt_specs(param_specs, param_shapes, mesh)
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=P(), m=zs, v=zs)
+
+
+# --------------------------------------------------------------------- #
+# LM inputs
+
+
+def lm_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_specs(cfg, mesh: Mesh, batch: int) -> Dict[str, P]:
+    """KV cache (L, B, S, Hkv, dh): B over DP; S over 'model' (SP decode).
+    B=1 long-context: S over (data, model) instead."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if batch == 1:
+        spec = P(None, None, ("data", "model"), None, None)
+    elif batch % dp_size == 0:
+        spec = P(None, dp, "model", None, None)
+    else:
+        spec = P(None, None, "model", None, None)
+    return {"k": spec, "v": spec}
+
+
+def decode_token_spec(mesh: Mesh, batch: int) -> P:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    return P(dp) if batch % dp_size == 0 and batch > 1 else P()
+
+
+# --------------------------------------------------------------------- #
+# GNN / recsys inputs (node & edge arrays row-sharded over the full mesh)
+
+
+def flat_mesh_axes(mesh: Mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def gnn_input_specs(mesh: Mesh, arch_id: str) -> Dict[str, P]:
+    rows = flat_mesh_axes(mesh)
+    specs = {
+        "x": P(rows, None),
+        "edge_src": P(rows),
+        "edge_dst": P(rows),
+        "labels": P(rows),
+    }
+    if arch_id == "meshgraphnet":
+        specs["edge_attr"] = P(rows, None)
+        specs["y"] = P(rows, None)
+    if arch_id == "dimenet":
+        specs.update(
+            {"z": P(rows), "pos": P(rows, None), "triplets": P(rows, None), "y": P(rows, None)}
+        )
+    return specs
+
+
+def din_param_specs(cfg, mesh: Mesh) -> Dict[str, P]:
+    m = _axis_size(mesh, "model")
+    specs = {
+        "item_table": P("model", None) if cfg.vocab_items % m == 0 else P(),
+        "cat_table": P("model", None) if cfg.vocab_cats % m == 0 else P(),
+    }
+    for i in range(len(cfg.attn_mlp) + 1):
+        specs[f"attn_w{i}"] = P()
+        specs[f"attn_b{i}"] = P()
+    for i in range(len(cfg.top_mlp) + 1):
+        specs[f"top_w{i}"] = P()
+        specs[f"top_b{i}"] = P()
+    return specs
+
+
+def din_batch_specs(mesh: Mesh, batch: int, retrieval: bool = False) -> Dict[str, P]:
+    if retrieval:
+        rows = flat_mesh_axes(mesh)
+        return {
+            "hist_items": P(),
+            "hist_cats": P(),
+            "cand_items": P(rows),
+            "cand_cats": P(rows),
+        }
+    dp = dp_axes(mesh)
+    return {
+        "hist_items": P(dp, None),
+        "hist_cats": P(dp, None),
+        "target_item": P(dp),
+        "target_cat": P(dp),
+        "label": P(dp),
+    }
+
+
+# --------------------------------------------------------------------- #
+# helpers
+
+
+def shard_specs_tree(mesh: Mesh, specs_tree, shapes_tree):
+    """ShapeDtypeStructs + NamedShardings for .lower() dry-runs."""
+
+    def one(spec, sds):
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree.map(one, specs_tree, shapes_tree)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: EmbeddingBag (ragged gather + bag reduce) over a
+VMEM-resident table tile.
+
+JAX has no native EmbeddingBag; the recsys substrate builds it from
+jnp.take + segment_sum (models/recsys.py). This kernel is the hot-row
+fast path: Moctopus labor division applied to embedding tables — the few
+high-frequency rows (graph: high-degree nodes; recsys: head items) are
+cached in a VMEM tile and bagged there, while the cold long-tail goes
+through the HBM gather path. (DESIGN §4, din row.)
+
+    out[b] = reduce_{l: ids[b,l] != SENTINEL} table[ids[b, l]]
+
+Layout / tiling:
+  grid (B/Bt,). Each program holds the full (V, D) hot table tile plus an
+  (Bt, L) id tile; the L-trip gather-accumulate unrolls (L is the bag
+  width, typically <= 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SENTINEL = -1
+
+
+def _embag_kernel(tab_ref, ids_ref, o_ref, *, mode: str):
+    ids = ids_ref[...]  # (Bt, L)
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)  # (Bt, D)
+    cnt = jnp.zeros((ids.shape[0], 1), dtype=jnp.float32)
+    for l in range(ids.shape[1]):
+        col = ids[:, l]  # (Bt,)
+        valid = col != SENTINEL
+        safe = jnp.where(valid, col, 0)
+        rows = jnp.take(tab_ref[...], safe, axis=0)  # (Bt, D) row gather
+        acc = acc + jnp.where(valid[:, None], rows.astype(jnp.float32), 0)
+        cnt = cnt + valid[:, None].astype(jnp.float32)
+    if mode == "mean":
+        acc = acc / jnp.maximum(cnt, 1.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_b", "interpret"))
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    mode: str = "sum",
+    block_b: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(V, D) hot table x (B, L) bags -> (B, D)."""
+    V, D = table.shape
+    B, L = ids.shape
+    block_b = min(block_b, B)
+    pb = (-B) % block_b
+    idp = jnp.pad(ids, ((0, pb), (0, 0)), constant_values=SENTINEL) if pb else ids
+    grid = ((B + pb) // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_embag_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((V, D), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B + pb, D), table.dtype),
+        interpret=interpret,
+    )(table, idp)
+    return out[:B]

@@ -1,0 +1,54 @@
+"""Jitted dispatch wrappers over the Pallas kernels.
+
+Callers use these, never pl.pallas_call directly. Each wrapper enforces the
+kernel's VMEM-residency preconditions and falls back to the pure-jnp oracle
+(ref.py) when they don't hold, so the public API is total.
+
+``interpret`` defaults to True because this container is CPU-only; on TPU
+deployments set REPRO_PALLAS_INTERPRET=0 to lower for real.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitmap_spmm import bitmap_spmm as _bitmap_spmm
+from repro.kernels.ell_spmm import ell_pull as _ell_pull
+from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+# VMEM is ~16 MiB/core on v5e; leave headroom for double buffering.
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def bitmap_spmm(f_packed, a_packed, k: int, block_b: int = 8, block_wn: int = 128):
+    """Packed boolean smxm; falls back to ref for degenerate shapes."""
+    B, wk = f_packed.shape
+    K, wn = a_packed.shape
+    if k == 0:
+        return jnp.zeros((B, wn), dtype=jnp.uint32)
+    if B % min(block_b, B) or wn % min(block_wn, wn):
+        return ref.bitmap_spmm_ref(f_packed, a_packed, k)
+    return _bitmap_spmm(
+        f_packed, a_packed, k, block_b=block_b, block_wn=block_wn, interpret=_INTERPRET
+    )
+
+
+def ell_pull(f, in_ell, block_b: int = 128, block_j: int = 256):
+    """Pull-ELL expansion; jnp fallback when the frontier stripe exceeds VMEM."""
+    B, N = f.shape
+    stripe = min(block_b, B) * N * f.dtype.itemsize
+    if stripe > _VMEM_BUDGET_BYTES or in_ell.shape[1] == 0:
+        return ref.ell_pull_ref(f, in_ell)
+    return _ell_pull(f, in_ell, block_b=block_b, block_j=block_j, interpret=_INTERPRET)
+
+
+def embedding_bag(table, ids, mode: str = "sum", block_b: int = 128):
+    """Hot-row EmbeddingBag; jnp fallback when the table tile exceeds VMEM."""
+    V, D = table.shape
+    if V * D * table.dtype.itemsize > _VMEM_BUDGET_BYTES:
+        return ref.embedding_bag_ref(table, ids, mode=mode)
+    return _embedding_bag(table, ids, mode=mode, block_b=block_b, interpret=_INTERPRET)

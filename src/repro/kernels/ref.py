@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth; kernel tests sweep shapes and
+dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = -1
+WORD = 32
+
+
+def bitmap_spmm_ref(f_packed: jnp.ndarray, a_packed: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean-semiring matmul over packed uint32 bitmaps.
+
+    f_packed: (B, Wk) uint32 — frontier bits over K source rows
+    a_packed: (K, Wn) uint32 — adjacency bits over N destination columns
+    k:        actual number of source rows (K may be padded to Wk*32)
+    returns:  (B, Wn) uint32 — OR over active rows of their bit-rows
+    """
+    B, wk = f_packed.shape
+    _, wn = a_packed.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    fbits = (f_packed[:, :, None] >> shifts) & jnp.uint32(1)  # (B, Wk, 32)
+    fbits = fbits.reshape(B, wk * WORD)[:, :k].astype(bool)  # (B, k)
+    sel = jnp.where(fbits[:, :, None], a_packed[None, :k, :], jnp.uint32(0))
+    return jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def ell_pull_ref(f: jnp.ndarray, in_ell: jnp.ndarray) -> jnp.ndarray:
+    """Pull-mode bounded-width expansion.
+
+    f:      (B, N) accumulator dtype
+    in_ell: (N, W) int32 — local in-neighbor (source) indices, SENTINEL pad
+    out[b, j] = sum_s f[b, in_ell[j, s]]  (sentinel entries contribute 0)
+    """
+    out = jnp.zeros_like(f)
+    for s in range(in_ell.shape[-1]):
+        idx = in_ell[:, s]
+        valid = idx != SENTINEL
+        vals = f[:, jnp.where(valid, idx, 0)]
+        out = out + jnp.where(valid[None, :], vals, 0)
+    return out
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray, ids: jnp.ndarray, mode: str = "sum"
+) -> jnp.ndarray:
+    """EmbeddingBag over a VMEM-resident table tile (hot-row cache).
+
+    table: (V, D); ids: (B, L) int32 with SENTINEL padding.
+    out[b] = reduce_l table[ids[b, l]]  (sum or mean over valid entries)
+    """
+    valid = ids != SENTINEL
+    safe = jnp.where(valid, ids, 0)
+    rows = table[safe]  # (B, L, D)
+    rows = jnp.where(valid[:, :, None], rows, 0)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        cnt = valid.sum(axis=1, keepdims=True).astype(table.dtype)
+        out = out / jnp.maximum(cnt, 1)
+    return out

@@ -1,0 +1,595 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step / prefill /
+decode_step / GNN train / DIN serve / Moctopus k-hop) against
+ShapeDtypeStruct stand-ins with production shardings, compiles it, and
+records:
+  - memory_analysis()           (bytes per device: args/outputs/temps)
+  - cost_analysis()             (HLO FLOPs + bytes accessed)
+  - per-collective byte totals  (parsed from the optimized HLO)
+into experiments/dryrun/<arch>__<shape>__<mesh>.json — the §Roofline input.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY, get_arch
+from repro.configs.base import ShapeSpec
+from repro.distributed import sharding_rules as rules
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as din_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import cross_entropy_loss
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+_COLLECTIVE_RE = re.compile(
+    # tuple shapes may carry /*index=N*/ comments — allow them in the group
+    r"=\s*(\(?[a-z0-9\[\],{}\s/*=.]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op, by op kind.
+
+    Result-shape bytes approximate per-device payload (exact for
+    all-reduce/permute results; upper bound for all-gather). '-start' ops
+    only (async pairs would double-count with '-done').
+    """
+    totals: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[kind] = totals.get(kind, 0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["_counts"] = counts  # type: ignore
+    return totals
+
+
+def _pad(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------- #
+# per-family cell builders: return (fn, args: tuple of ShapeDtypeStructs)
+
+
+def build_lm_cell(arch_id: str, shape: ShapeSpec, mesh, cfg_override=None):
+    spec = get_arch(arch_id)
+    cfg = cfg_override if cfg_override is not None else spec.make_config()
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    if cfg.moe is not None:
+        # group routing by DP shard count (see models/moe.py) + explicit
+        # dispatch-buffer shardings (§Perf-2: 48x — without them GSPMD falls
+        # into replicate-then-reshard on the (G,E,C,D) buffers)
+        tokens_total = shape.dims["batch"] * shape.dims.get("seq_len", 1)
+        groups = dp_size if tokens_total % dp_size == 0 and tokens_total >= dp_size else 1
+        ep_axis = "model" if cfg.moe.num_experts % mesh.shape["model"] == 0 else None
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(
+                cfg.moe, num_groups=groups, dp_spec=dp, ep_axis=ep_axis
+            ),
+        )
+    pshapes = jax.eval_shape(lambda k: tf_mod.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = rules.lm_param_specs(cfg, mesh)
+    params_in = rules.shard_specs_tree(mesh, pspecs, pshapes)
+    B, S = shape.dims["batch"], shape.dims["seq_len"]
+
+    if shape.kind == "train":
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        ospecs = rules.opt_state_specs(pspecs, pshapes, mesh)
+        opt_in = rules.shard_specs_tree(mesh, ospecs, oshapes)
+        bspec = rules.lm_batch_specs(mesh)
+        batch_in = {
+            "tokens": _sds((B, S), jnp.int32, mesh, bspec["tokens"]),
+            "labels": _sds((B, S), jnp.int32, mesh, bspec["labels"]),
+        }
+        ocfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: tf_mod.loss_fn(cfg, p, batch))(
+                params
+            )
+            new_p, new_o, metrics = adamw_update(ocfg, params, grads, opt_state)
+            return new_p, new_o, loss
+
+        return train_step, (params_in, opt_in, batch_in)
+
+    if shape.kind == "prefill":
+        bspec = rules.lm_batch_specs(mesh)
+        tokens_in = _sds((B, S), jnp.int32, mesh, bspec["tokens"])
+
+        def prefill(params, tokens):
+            logits, _ = tf_mod.forward(cfg, params, tokens)
+            return logits
+
+        return prefill, (params_in, tokens_in)
+
+    # decode: one new token against a seq_len KV cache
+    if cfg.moe is not None:
+        groups = dp_size if B % dp_size == 0 and B >= dp_size else 1
+        ep_axis = "model" if cfg.moe.num_experts % mesh.shape["model"] == 0 else None
+        cfg = dataclasses.replace(
+            cfg,
+            moe=dataclasses.replace(
+                cfg.moe,
+                num_groups=groups,
+                dp_spec=dp if groups > 1 else None,
+                ep_axis=ep_axis if groups > 1 else None,
+            ),
+        )
+    S_cache = min(S, cfg.window) if cfg.window else S
+    cache_shape = (cfg.n_layers, B, S_cache, cfg.n_kv_heads, cfg.d_head)
+    cspec = rules.lm_cache_specs(cfg, mesh, batch=B)
+    dt = jnp.dtype(cfg.dtype)
+    cache_in = {
+        "k": _sds(cache_shape, dt, mesh, cspec["k"]),
+        "v": _sds(cache_shape, dt, mesh, cspec["v"]),
+    }
+    tok_in = _sds((B,), jnp.int32, mesh, rules.decode_token_spec(mesh, B))
+
+    def decode(params, cache, tokens):
+        return tf_mod.decode_step(cfg, params, cache, tokens, jnp.int32(S - 1))
+
+    return decode, (params_in, cache_in, tok_in)
+
+
+_GNN_FNS = {
+    "gcn-cora": (gnn_mod.gcn_init, gnn_mod.gcn_forward),
+    "pna": (gnn_mod.pna_init, gnn_mod.pna_forward),
+    "meshgraphnet": (gnn_mod.mgn_init, gnn_mod.mgn_forward),
+    "dimenet": (gnn_mod.dimenet_init, gnn_mod.dimenet_forward),
+}
+
+
+def _gnn_graph_sds(arch_id: str, mesh, n: int, e: int, d: int, batch=None):
+    rows = tuple(mesh.axis_names)
+    nd = int(np.prod(list(mesh.shape.values())))
+    n, e = _pad(n, nd), _pad(e, nd)
+    lead = (batch,) if batch else ()
+    lspec = (P(),) if batch else ()  # molecule batch: replicate batch dim? no:
+    g = {}
+
+    def S(shape, dtype, spec):
+        return _sds(shape, dtype, mesh, spec)
+
+    bspec = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if batch:
+        # batched small graphs: shard the BATCH, replicate the tiny graph dims
+        g["x"] = S((batch, n, d), jnp.float32, P(bspec, None, None))
+        g["edge_src"] = S((batch, e), jnp.int32, P(bspec, None))
+        g["edge_dst"] = S((batch, e), jnp.int32, P(bspec, None))
+        g["labels"] = S((batch, n), jnp.int32, P(bspec, None))
+        if arch_id == "meshgraphnet":
+            g["edge_attr"] = S((batch, e, 4), jnp.float32, P(bspec, None, None))
+            g["y"] = S((batch, n, 3), jnp.float32, P(bspec, None, None))
+        if arch_id == "dimenet":
+            g["z"] = S((batch, n), jnp.int32, P(bspec, None))
+            g["pos"] = S((batch, n, 3), jnp.float32, P(bspec, None, None))
+            g["triplets"] = S((batch, 2 * e, 2), jnp.int32, P(bspec, None, None))
+            g["y"] = S((batch, n, 1), jnp.float32, P(bspec, None, None))
+        return g
+    g["x"] = S((n, d), jnp.float32, P(rows, None))
+    g["edge_src"] = S((e,), jnp.int32, P(rows))
+    g["edge_dst"] = S((e,), jnp.int32, P(rows))
+    g["labels"] = S((n,), jnp.int32, P(rows))
+    if arch_id == "meshgraphnet":
+        g["edge_attr"] = S((e, 4), jnp.float32, P(rows, None))
+        g["y"] = S((n, 3), jnp.float32, P(rows, None))
+    if arch_id == "dimenet":
+        g["z"] = S((n,), jnp.int32, P(rows))
+        g["pos"] = S((n, 3), jnp.float32, P(rows, None))
+        g["triplets"] = S((2 * e, 2), jnp.int32, P(rows, None))
+        g["y"] = S((n, 1), jnp.float32, P(rows, None))
+    return g
+
+
+def build_gnn_cell(arch_id: str, shape: ShapeSpec, mesh):
+    spec = get_arch(arch_id)
+    base_cfg = spec.make_config()
+    init, fwd = _GNN_FNS[arch_id]
+    dims = shape.dims
+    d_feat = dims.get("d_feat", 100)
+    if hasattr(base_cfg, "d_feat"):
+        base_cfg = dataclasses.replace(base_cfg, d_feat=d_feat)
+    cfg = base_cfg
+    pshapes = jax.eval_shape(lambda k: init(cfg, k), jax.random.PRNGKey(0))
+    params_in = jax.tree.map(
+        lambda s: _sds(s.shape, s.dtype, mesh, P()), pshapes
+    )  # GNN params are small: replicated
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    opt_in = jax.tree.map(lambda s: _sds(s.shape, s.dtype, mesh, P()), oshapes)
+    ocfg = AdamWConfig()
+
+    if shape.name == "molecule":
+        B, n, e = dims["batch"], dims["n_nodes"], dims["n_edges"]
+        g_in = _gnn_graph_sds(arch_id, mesh, n, e, d_feat if arch_id != "dimenet" else 3, batch=B)
+
+        def loss_fn(p, g):
+            out = jax.vmap(lambda gi: fwd(cfg, p, gi))(
+                {k: v for k, v in g.items() if k not in ("labels", "y")}
+            )
+            if arch_id in ("meshgraphnet", "dimenet"):
+                return jnp.mean((out - g["y"]) ** 2)
+            oh = jax.nn.one_hot(g["labels"], out.shape[-1])
+            return -jnp.mean(jax.nn.log_softmax(out) * oh)
+
+    elif shape.name == "minibatch_lg":
+        bn = dims["batch_nodes"]
+        f0, f1 = dims["fanout0"], dims["fanout1"]
+        n_frontier = bn * (1 + f0 + f0 * f1)
+        e_block = bn * f0 + bn * f0 * f1
+        g_in = _gnn_graph_sds(arch_id, mesh, n_frontier, e_block, dims["d_feat"])
+
+        def loss_fn(p, g):
+            out = fwd(cfg, p, {k: v for k, v in g.items() if k not in ("labels", "y")})
+            out = out[:bn]  # seeds first
+            if arch_id in ("meshgraphnet", "dimenet"):
+                return jnp.mean((out - g["y"][:bn]) ** 2)
+            oh = jax.nn.one_hot(g["labels"][:bn], out.shape[-1])
+            return -jnp.mean(jax.nn.log_softmax(out) * oh)
+
+    else:  # full_graph_sm / ogb_products
+        n, e = dims["n_nodes"], dims["n_edges"]
+        g_in = _gnn_graph_sds(arch_id, mesh, n, e, d_feat)
+
+        def loss_fn(p, g):
+            out = fwd(cfg, p, {k: v for k, v in g.items() if k not in ("labels", "y")})
+            if arch_id in ("meshgraphnet", "dimenet"):
+                return jnp.mean((out - g["y"]) ** 2)
+            oh = jax.nn.one_hot(g["labels"], out.shape[-1])
+            return -jnp.mean(jax.nn.log_softmax(out) * oh)
+
+    def train_step(params, opt_state, g):
+        loss, grads = jax.value_and_grad(loss_fn)(params, g)
+        new_p, new_o, _ = adamw_update(ocfg, params, grads, opt_state)
+        return new_p, new_o, loss
+
+    return train_step, (params_in, opt_in, g_in)
+
+
+def build_din_cell(arch_id: str, shape: ShapeSpec, mesh):
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    pshapes = jax.eval_shape(lambda k: din_mod.din_init(cfg, k), jax.random.PRNGKey(0))
+    pspecs = rules.din_param_specs(cfg, mesh)
+    params_in = rules.shard_specs_tree(mesh, pspecs, pshapes)
+    dims = shape.dims
+
+    if shape.name == "retrieval_cand":
+        C = _pad(dims["n_candidates"], int(np.prod(list(mesh.shape.values()))))
+        bspecs = rules.din_batch_specs(mesh, 1, retrieval=True)
+        batch_in = {
+            "hist_items": _sds((1, cfg.hist_len), jnp.int32, mesh, bspecs["hist_items"]),
+            "hist_cats": _sds((1, cfg.hist_len), jnp.int32, mesh, bspecs["hist_cats"]),
+            "cand_items": _sds((C,), jnp.int32, mesh, bspecs["cand_items"]),
+            "cand_cats": _sds((C,), jnp.int32, mesh, bspecs["cand_cats"]),
+        }
+
+        def score(params, batch):
+            return din_mod.din_score_candidates(cfg, params, batch)
+
+        return score, (params_in, batch_in)
+
+    B = dims["batch"]
+    bspecs = rules.din_batch_specs(mesh, B)
+    batch_in = {
+        "hist_items": _sds((B, cfg.hist_len), jnp.int32, mesh, bspecs["hist_items"]),
+        "hist_cats": _sds((B, cfg.hist_len), jnp.int32, mesh, bspecs["hist_cats"]),
+        "target_item": _sds((B,), jnp.int32, mesh, bspecs["target_item"]),
+        "target_cat": _sds((B,), jnp.int32, mesh, bspecs["target_cat"]),
+        "label": _sds((B,), jnp.int32, mesh, bspecs["label"]),
+    }
+    if shape.name == "train_batch":
+        oshapes = jax.eval_shape(adamw_init, pshapes)
+        ospecs = rules.opt_state_specs(pspecs, pshapes, mesh)
+        opt_in = rules.shard_specs_tree(mesh, ospecs, oshapes)
+        ocfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: din_mod.din_loss(cfg, p, batch)
+            )(params)
+            new_p, new_o, _ = adamw_update(ocfg, params, grads, opt_state)
+            return new_p, new_o, loss
+
+        return train_step, (params_in, opt_in, batch_in)
+
+    def serve(params, batch):
+        return din_mod.din_forward(cfg, params, batch)
+
+    return serve, (params_in, batch_in)
+
+
+def build_rpq_cell(arch_id: str, shape: ShapeSpec, mesh):
+    from repro.configs.moctopus_rpq import make_config, snapshot_stub
+    from repro.core.engine import EngineConfig, MoctopusEngine
+
+    cfg = make_config()
+    dims = shape.dims
+    Pm = mesh.shape["model"]
+    snap = snapshot_stub(dims["n_nodes"], Pm, cfg, avg_degree=dims["avg_degree"])
+    # production engine = §Perf-1 winner (saturated counts + bitmap wire);
+    # the paper-faithful baseline lives in experiments/dryrun_baseline/
+    eng = MoctopusEngine(
+        snap,
+        EngineConfig(semiring="count", saturate=True, bitmap_collectives=True),
+        mesh=mesh,
+        mode="sharded",
+    )
+    fn, _ = eng.make_khop_fn(dims["k"])
+    B = dims["batch"]
+    f_in = _sds((B, snap.n_pad), jnp.float32, mesh, P("data", "model"))
+    # full-size graph-arg specs (the stub only fixed offsets/topology)
+    n_local = snap.n_local
+    E_off = max(
+        (dims["n_nodes"] * dims["avg_degree"]) // (10 * len(snap.buckets) * Pm), 8
+    )
+    h_pad = snap.hot_dense.shape[1]
+    gargs = (
+        _sds((Pm, n_local, cfg.in_ell_width), jnp.int32, mesh, P("model")),
+        _sds((Pm, h_pad, n_local), jnp.float32, mesh, P("model")),
+        _sds((Pm, h_pad), jnp.int32, mesh, P("model")),
+        _sds((Pm, h_pad), jnp.int32, mesh, P("model")),
+        *[_sds((Pm, E_off), jnp.int32, mesh, P("model")) for _ in snap.buckets],
+        *[_sds((Pm, E_off), jnp.int32, mesh, P("model")) for _ in snap.buckets],
+    )
+    return (lambda f, *a: fn(f, *a)), ((f_in,) + gargs, "_splat")
+
+
+BUILDERS = {"lm": build_lm_cell, "gnn": build_gnn_cell, "recsys": build_din_cell, "rpq": build_rpq_cell}
+
+
+# --------------------------------------------------------------------- #
+# flops accounting: XLA's cost_analysis counts a lax.scan body ONCE, so for
+# layer-scanned LMs the production module under-reports per-step FLOPs /
+# bytes / collective payloads by ~n_layers. We lower UNROLLED variants at
+# L=1 and L=2, take the delta as the exact per-layer cost, and extrapolate:
+#   total(L) = base + L * per_layer,  base = cost(L1) - per_layer
+# (attention's KV-chunk scan is unrolled too). Validated by
+# tests/test_dryrun_small.py against an analytic 6ND estimate.
+
+
+def _cost_of(fn, args, mesh):
+    with mesh:
+        compiled = jax.jit(fn).lower(*args).compile()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    coll.pop("_counts", None)
+    return {
+        "flops": float(ca.get("flops") or 0.0),
+        "bytes": float(ca.get("bytes accessed") or 0.0),
+        "coll": coll,
+    }
+
+
+def lm_accounting(arch_id: str, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    spec = get_arch(arch_id)
+    costs = {}
+    for L in (1, 2):
+        patched = dataclasses.replace(
+            spec.make_config(), n_layers=L, scan_layers=False, attn_unroll=True
+        )
+        fn, args = build_lm_cell(arch_id, shape, mesh, cfg_override=patched)
+        costs[L] = _cost_of(fn, args, mesh)
+    L_full = spec.make_config().n_layers
+    per_layer = {
+        "flops": costs[2]["flops"] - costs[1]["flops"],
+        "bytes": costs[2]["bytes"] - costs[1]["bytes"],
+    }
+    base = {
+        "flops": costs[1]["flops"] - per_layer["flops"],
+        "bytes": costs[1]["bytes"] - per_layer["bytes"],
+    }
+    coll_total = {}
+    for k in set(costs[1]["coll"]) | set(costs[2]["coll"]):
+        c1, c2 = costs[1]["coll"].get(k, 0), costs[2]["coll"].get(k, 0)
+        coll_total[k] = (c1 - (c2 - c1)) + L_full * (c2 - c1)
+    return {
+        "method": "unrolled L1/L2 extrapolation (scan-once correction)",
+        "n_layers": L_full,
+        "per_layer": per_layer,
+        "base": base,
+        "flops_total": base["flops"] + L_full * per_layer["flops"],
+        "bytes_total": base["bytes"] + L_full * per_layer["bytes"],
+        "collectives_total": coll_total,
+        "raw": costs,
+    }
+
+
+# --------------------------------------------------------------------- #
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str, force=False):
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip-cached] {tag}")
+        return json.load(open(path))
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "family": spec.family,
+        "dims": shape.dims,
+    }
+    if shape.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = shape.skip_reason
+        _write(path, rec)
+        print(f"[skip-noted ] {tag}: {shape.skip_reason}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        fn, args = BUILDERS[spec.family](arch_id, shape, mesh)
+        splat = False
+        if isinstance(args, tuple) and len(args) == 2 and args[1] == "_splat":
+            args, splat = args[0], True
+        with mesh:
+            jitted = jax.jit(fn)
+            lowered = jitted.lower(*args) if splat else jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec.update(
+            {
+                "status": "ok",
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory": {
+                    "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                    "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                    "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+                },
+                "cost": {
+                    "flops": ca.get("flops"),
+                    "bytes_accessed": ca.get("bytes accessed"),
+                    "transcendentals": ca.get("transcendentals"),
+                },
+                "collectives": collective_bytes(hlo),
+                "hlo_bytes": len(hlo),
+            }
+        )
+        fl = ca.get("flops")
+        print(
+            f"[ok         ] {tag}: compile={t_compile:.1f}s "
+            f"flops={fl:.3g} " if fl is not None else f"[ok         ] {tag}: ",
+            f"coll={ {k: round(v / 1e6, 1) for k, v in rec['collectives'].items() if k != '_counts'} }MB",
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[ERROR      ] {tag}: {type(e).__name__}: {str(e)[:200]}")
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def run_acct_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str, force=False):
+    """LM flops-accounting pass -> <tag>__acct.json."""
+    tag = f"{arch_id}__{shape_name}__{mesh_kind}__acct"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip-cached] {tag}")
+        return json.load(open(path))
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_kind, "kind": "acct"
+    }
+    if shape.skip_reason or spec.family != "lm":
+        rec["status"] = "skipped"
+        _write(path, rec)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        rec["accounting"] = lm_accounting(arch_id, shape, mesh)
+        rec["status"] = "ok"
+        print(
+            f"[acct-ok    ] {tag}: flops_total={rec['accounting']['flops_total']:.3g}"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[acct-ERROR ] {tag}: {str(e)[:200]}")
+    _write(path, rec)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--acct", action="store_true", help="LM flops-accounting pass")
+    args = ap.parse_args()
+    out_dir = args.out or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+    )
+    archs = list(REGISTRY) if args.arch == "all" else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_err = n_skip = 0
+    for arch_id in archs:
+        spec = get_arch(arch_id)
+        shapes = list(spec.shapes) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                if args.acct:
+                    rec = run_acct_cell(
+                        arch_id, shape_name, mesh_kind, out_dir, force=args.force
+                    )
+                else:
+                    rec = run_cell(
+                        arch_id, shape_name, mesh_kind, out_dir, force=args.force
+                    )
+                s = rec.get("status")
+                n_ok += s == "ok"
+                n_err += s == "error"
+                n_skip += s == "skipped"
+    print(f"\ndone: ok={n_ok} skipped={n_skip} errors={n_err}")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

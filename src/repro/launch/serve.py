@@ -1,0 +1,69 @@
+"""Serving driver for the paper's system: a batch RPQ/k-hop query server
+over a live Moctopus-partitioned graph (thin CLI over examples/serve_rpq.py
+logic, plus the optimized engine flags from §Perf-1).
+
+    PYTHONPATH=src python -m repro.launch.serve --nodes 20000 --k 3 \
+        --engine optimized
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.engine import EngineConfig, MoctopusEngine
+from repro.core.partition import MoctopusPartitioner, PartitionConfig
+from repro.core.storage import DynamicGraphStore, snapshot_from_store
+from repro.core.update import GraphUpdater
+from repro.data.graphs import make_rmat_graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=20_000)
+    ap.add_argument("--partitions", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument(
+        "--engine",
+        default="baseline",
+        choices=["baseline", "optimized"],
+        help="baseline = paper-faithful f32 count; optimized = §Perf-1 "
+        "saturated-count + bitmap collectives",
+    )
+    args = ap.parse_args()
+    src, dst, n = make_rmat_graph(args.nodes, avg_degree=8, seed=0)
+    store = DynamicGraphStore()
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=args.partitions))
+    upd = GraphUpdater(store, part, migrate_every=4)
+    for i in range(0, len(src), 8192):
+        upd.insert_batch(src[i : i + 8192], dst[i : i + 8192])
+    snap = snapshot_from_store(store, part)
+    ecfg = (
+        EngineConfig()
+        if args.engine == "baseline"
+        else EngineConfig(semiring="count", saturate=True, bitmap_collectives=True)
+    )
+    eng = MoctopusEngine(snap, ecfg, mode="simulated")
+    fn, gargs = eng.make_khop_fn(args.k)
+    rng = np.random.default_rng(0)
+    times = []
+    for _ in range(args.requests):
+        f = eng.initial_frontier(rng.integers(0, n, args.batch))
+        t0 = time.perf_counter()
+        out = np.asarray(fn(f, *gargs))
+        times.append(time.perf_counter() - t0)
+    ms = np.array(times) * 1e3
+    print(
+        f"engine={args.engine}: p50={np.percentile(ms, 50):.1f}ms "
+        f"p99={np.percentile(ms, 99):.1f}ms "
+        f"throughput={args.requests * args.batch / sum(times):.0f} q/s "
+        f"ipc/hop={eng.ipc_bytes_per_hop(args.batch) / 1e6:.2f}MB"
+    )
+
+
+if __name__ == "__main__":
+    main()

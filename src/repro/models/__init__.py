@@ -1,0 +1,9 @@
+"""Model zoo: the 10 assigned architectures (+ the paper's own engine).
+
+- transformer.py : dense + MoE decoder LMs (GQA, RoPE, SWA, QKV-bias)
+- moe.py         : top-k router with capacity (shares the paper's 1.05x
+                   dynamic-capacity logic), sort-based dispatch, EP sharding
+- gnn.py         : GCN, PNA, MeshGraphNet, DimeNet on the sparse substrate
+- recsys.py      : DIN with the EmbeddingBag substrate (hot/cold split)
+- sampler.py     : fanout neighbor sampler (minibatch_lg shape)
+"""

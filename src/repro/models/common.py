@@ -1,0 +1,179 @@
+"""Shared model substrate: initializers, norms, RoPE, flash attention.
+
+Everything is functional: params are plain pytrees of jnp arrays, models are
+pure functions. Initialization goes through ``init_dense``-style helpers so
+``jax.eval_shape`` can derive parameter ShapeDtypeStructs without touching
+memory (the dry-run path for trillion-parameter configs).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def init_stack(key, shape, dtype=jnp.float32, fan_in_axis: int = -2):
+    """Normal init scaled by the fan-in dimension of ``shape``."""
+    scale = 1.0 / math.sqrt(shape[fan_in_axis])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+
+
+def rope_freqs(d_head: int, theta: float, rope_pct: float = 1.0):
+    d_rot = int(d_head * rope_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+    return inv, d_rot
+
+
+def apply_rope(x, positions, theta: float = 10_000.0, rope_pct: float = 1.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    inv, d_rot = rope_freqs(dh, theta, rope_pct)
+    if d_rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, d_rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------- #
+# flash-style attention (pure JAX, scan over KV chunks, online softmax)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk: int = 1024,
+    unroll: bool = False,
+    p_bf16: bool = False,
+):
+    """Memory-bounded attention with GQA, causal + sliding-window masking.
+
+    q: (B, Sq, Hq, dh);  k, v: (B, Sk, Hkv, dh);  Hq %% Hkv == 0.
+    Scans KV in chunks with running (max, denom) so no (Sq, Sk) score matrix
+    ever materializes — the realistic TPU lowering for 32k+ contexts.
+    ``q_offset``: absolute position of q[0] (for decode / chunked prefill).
+    """
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    scale = 1.0 / math.sqrt(dh)
+    n_chunks = (Sk + chunk - 1) // chunk
+    Sk_pad = n_chunks * chunk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp  # kb/vb: (B, chunk, Hkv, dh)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb) * scale  # (B,Sq,Hkv,G,chunk)
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else (k_pos[None, :] < Sk)
+        mask = mask & (k_pos[None, :] < Sk)
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        if p_bf16:  # §Perf-3: bf16 probabilities, f32 row stats + accum
+            p = p.astype(jnp.bfloat16)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, dh), jnp.float32)
+    if unroll:  # flops-accounting variant (scan bodies are counted once)
+        carry = (m0, l0, a0)
+        for ci in range(n_chunks):
+            carry, _ = body(carry, (jnp.int32(ci), kc[ci], vc[ci]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+        )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len):
+    """Single-token attention against a (possibly sharded) KV cache.
+
+    q: (B, Hq, dh); caches: (B, S_max, Hkv, dh); cur_len: scalar live length.
+    Plain softmax over the cache — XLA partitions the reduction when the
+    cache's S axis is sharded (sequence-parallel decode).
+    """
+    B, S, Hkv, dh = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache) / math.sqrt(dh)
+    mask = jnp.arange(S)[None, None, None, :] < cur_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache)
+    return out.reshape(B, Hq * dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# losses
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """Mean next-token CE over valid positions. logits (..., V), labels (...)."""
+    valid = labels != ignore_id
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), safe[..., None], axis=-1
+    )[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

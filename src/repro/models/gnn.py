@@ -1,0 +1,345 @@
+"""GNN zoo: GCN, PNA, MeshGraphNet, DimeNet on the segment-sum substrate.
+
+JAX has no sparse message passing — it is built here from edge lists +
+``jax.ops.segment_sum`` (repro.sparse.segment), exactly the substrate the
+Moctopus engine uses for its ELL expansion. The same node->device placement
+from core/partition.py drives the sharded full-graph configs (DESIGN §4).
+
+Graph inputs are dicts of arrays (static shapes, SENTINEL-padded):
+  x (N, d)  node features        edge_src/edge_dst (E,) int32
+  DimeNet additionally: z (N,) atom types, pos (N, 3), triplets (T, 2)
+  (triplet = indices of two edges k->j, j->i sharing the middle node).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import init_stack, layer_norm
+from repro.sparse.segment import (
+    segment_count,
+    segment_max,
+    segment_mean,
+    segment_min,
+    segment_std,
+    segment_sum,
+)
+
+SENTINEL = -1
+
+
+def _mlp_init(key, dims, dt=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": init_stack(ks[i], (dims[i], dims[i + 1]), dt)
+        for i in range(len(dims) - 1)
+    } | {f"b{i}": jnp.zeros((dims[i + 1],), dt) for i in range(len(dims) - 1)}
+
+
+def _mlp_apply(p, x, n: int, act=jax.nn.relu, final_act: bool = False):
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _masked_edges(edge_src, edge_dst):
+    valid = edge_src != SENTINEL
+    return jnp.where(valid, edge_src, 0), jnp.where(valid, edge_dst, 0), valid
+
+
+# --------------------------------------------------------------------- #
+# GCN (Kipf & Welling) — gcn-cora: 2 layers, hidden 16, symmetric norm
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    d_feat: int
+    d_hidden: int = 16
+    n_layers: int = 2
+    n_classes: int = 7
+    aggregator: str = "mean"  # paper config: mean/sym
+
+
+def gcn_init(cfg: GCNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers)
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    return {
+        f"layer{i}": {"w": init_stack(ks[i], (dims[i], dims[i + 1]))}
+        for i in range(cfg.n_layers)
+    }
+
+
+def gcn_forward(cfg: GCNConfig, params, graph):
+    x = graph["x"]
+    n = x.shape[0]
+    s, d, valid = _masked_edges(graph["edge_src"], graph["edge_dst"])
+    # symmetric normalization with self-loops: coef = 1/sqrt(deg_u * deg_v)
+    ones = valid.astype(jnp.float32)
+    deg = segment_sum(ones, d, n) + 1.0  # in-degree + self-loop
+    coef = jax.lax.rsqrt(deg[s]) * jax.lax.rsqrt(deg[d]) * ones
+    for i in range(cfg.n_layers):
+        h = x @ params[f"layer{i}"]["w"]
+        agg = segment_sum(h[s] * coef[:, None], d, n)
+        h = agg + h * jax.lax.rsqrt(deg)[:, None]  # self loop
+        x = jax.nn.relu(h) if i < cfg.n_layers - 1 else h
+    return x  # logits (N, n_classes)
+
+
+# --------------------------------------------------------------------- #
+# PNA (Corso et al.) — 4 aggregators x 3 degree scalers
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str
+    d_feat: int
+    d_hidden: int = 75
+    n_layers: int = 4
+    n_classes: int = 7
+    delta: float = 2.5  # mean log-degree of the training graphs
+
+
+def pna_init(cfg: PNAConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    p = {"encode": _mlp_init(ks[0], [cfg.d_feat, cfg.d_hidden])}
+    for i in range(cfg.n_layers):
+        p[f"layer{i}"] = {
+            "pre": _mlp_init(ks[i + 1], [2 * cfg.d_hidden, cfg.d_hidden]),
+            "post": _mlp_init(ks[i + 1], [13 * cfg.d_hidden, cfg.d_hidden]),
+        }
+    p["decode"] = _mlp_init(ks[-1], [cfg.d_hidden, cfg.n_classes])
+    return p
+
+
+def pna_forward(cfg: PNAConfig, params, graph):
+    x = graph["x"]
+    n = x.shape[0]
+    s, d, valid = _masked_edges(graph["edge_src"], graph["edge_dst"])
+    x = _mlp_apply(params["encode"], x, 1, final_act=True)
+    deg = segment_sum(valid.astype(jnp.float32), d, n)  # in-degree
+    logd = jnp.log(deg + 1.0)
+    amp = (logd / cfg.delta)[:, None]
+    att = (cfg.delta / jnp.maximum(logd, 1e-6))[:, None]
+    for i in range(cfg.n_layers):
+        msg = _mlp_apply(
+            params[f"layer{i}"]["pre"],
+            jnp.concatenate([x[s], x[d]], axis=-1),
+            1,
+            final_act=True,
+        )
+        msg = jnp.where(valid[:, None], msg, 0)
+        aggs = [
+            segment_mean(msg, d, n),
+            segment_max(jnp.where(valid[:, None], msg, -1e30), d, n),
+            segment_min(jnp.where(valid[:, None], msg, 1e30), d, n),
+            segment_std(msg, d, n),
+        ]
+        aggs = [jnp.where(jnp.isfinite(a), a, 0.0) for a in aggs]
+        agg = jnp.concatenate(aggs, axis=-1)  # (N, 4h)
+        scaled = jnp.concatenate([agg, agg * amp, agg * att], axis=-1)  # 12h
+        x = x + _mlp_apply(
+            params[f"layer{i}"]["post"],
+            jnp.concatenate([x, scaled], axis=-1),
+            1,
+            final_act=True,
+        )
+    return _mlp_apply(params["decode"], x, 1)
+
+
+# --------------------------------------------------------------------- #
+# MeshGraphNet (Pfaff et al.) — 15 processor steps, hidden 128, sum agg
+
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str
+    d_feat: int
+    d_edge: int = 4
+    d_hidden: int = 128
+    n_layers: int = 15
+    mlp_layers: int = 2
+    d_out: int = 3  # predicted per-node dynamics
+
+
+def mgn_init(cfg: MGNConfig, key):
+    h = cfg.d_hidden
+    m = cfg.mlp_layers
+    ks = jax.random.split(key, 2 * cfg.n_layers + 3)
+    hidden = [h] * m
+
+    def mlp(k, d_in):
+        return _mlp_init(k, [d_in] + hidden)
+
+    p = {
+        "enc_node": mlp(ks[0], cfg.d_feat),
+        "enc_edge": mlp(ks[1], cfg.d_edge),
+        "dec": _mlp_init(ks[2], [h] * m + [cfg.d_out]),
+    }
+    for i in range(cfg.n_layers):
+        p[f"proc{i}"] = {
+            "edge": mlp(ks[3 + 2 * i], 3 * h),
+            "node": mlp(ks[4 + 2 * i], 2 * h),
+            "ln_e": jnp.ones((h,)),
+            "ln_e_b": jnp.zeros((h,)),
+            "ln_n": jnp.ones((h,)),
+            "ln_n_b": jnp.zeros((h,)),
+        }
+    return p
+
+
+def mgn_forward(cfg: MGNConfig, params, graph):
+    n = graph["x"].shape[0]
+    s, d, valid = _masked_edges(graph["edge_src"], graph["edge_dst"])
+    m = cfg.mlp_layers
+    x = _mlp_apply(params["enc_node"], graph["x"], m, final_act=True)
+    e = _mlp_apply(params["enc_edge"], graph["edge_attr"], m, final_act=True)
+    for i in range(cfg.n_layers):
+        pp = params[f"proc{i}"]
+        e_in = jnp.concatenate([e, x[s], x[d]], axis=-1)
+        e = e + layer_norm(_mlp_apply(pp["edge"], e_in, m), pp["ln_e"], pp["ln_e_b"])
+        agg = segment_sum(jnp.where(valid[:, None], e, 0), d, n)
+        x_in = jnp.concatenate([x, agg], axis=-1)
+        x = x + layer_norm(_mlp_apply(pp["node"], x_in, m), pp["ln_n"], pp["ln_n_b"])
+    return _mlp_apply(params["dec"], x, m)
+
+
+# --------------------------------------------------------------------- #
+# DimeNet (Klicpera et al.) — directional MP with triplet angular basis
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    n_species: int = 16
+    cutoff: float = 5.0
+    d_out: int = 1  # energy
+
+
+def _bessel_rbf(dist, n_radial: int, cutoff: float):
+    """sin(n pi d / c) / d radial basis with smooth envelope."""
+    d = jnp.maximum(dist, 1e-6)[..., None] / cutoff
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    env = 1 - 6 * d**5 + 15 * d**4 - 10 * d**3  # polynomial cutoff envelope
+    return env * jnp.sin(n * jnp.pi * d) / d
+
+
+def _legendre_sbf(cos_angle, n_spherical: int):
+    """Legendre polynomials P_l(cos a) as the angular basis (documented
+    simplification of the spherical Bessel x Y_l basis — DESIGN §2)."""
+    outs = [jnp.ones_like(cos_angle), cos_angle]
+    for l in range(2, n_spherical):
+        outs.append(
+            ((2 * l - 1) * cos_angle * outs[-1] - (l - 1) * outs[-2]) / l
+        )
+    return jnp.stack(outs[:n_spherical], axis=-1)
+
+
+def dimenet_init(cfg: DimeNetConfig, key):
+    h, nb = cfg.d_hidden, cfg.n_bilinear
+    ks = jax.random.split(key, 4 * cfg.n_blocks + 4)
+    p = {
+        "species": init_stack(ks[0], (cfg.n_species, h), fan_in_axis=-1),
+        "emb": _mlp_init(ks[1], [2 * h + cfg.n_radial, h]),
+        "out_final": _mlp_init(ks[2], [h, h, cfg.d_out]),
+    }
+    for i in range(cfg.n_blocks):
+        p[f"block{i}"] = {
+            "msg": _mlp_init(ks[3 + 4 * i], [h, h]),
+            "rbf_proj": init_stack(ks[4 + 4 * i], (cfg.n_radial, h)),
+            "sbf_proj": init_stack(
+                ks[5 + 4 * i], (cfg.n_spherical * cfg.n_radial, nb)
+            ),
+            "bilinear": init_stack(ks[6 + 4 * i], (nb, h, h), fan_in_axis=-2),
+            "out": _mlp_init(ks[3 + 4 * i], [h, h]),
+        }
+    return p
+
+
+def dimenet_forward(cfg: DimeNetConfig, params, graph):
+    """graph: z (N,), pos (N,3), edge_src/dst (E,), triplets (T,2) edge-pairs.
+
+    Returns per-node scalar outputs (sum-pooled externally for energies).
+    """
+    z, pos = graph["z"], graph["pos"]
+    n = z.shape[0]
+    s, d, valid = _masked_edges(graph["edge_src"], graph["edge_dst"])
+    vec = pos[d] - pos[s]
+    dist = jnp.sqrt(jnp.maximum((vec**2).sum(-1), 1e-12))
+    rbf = _bessel_rbf(dist, cfg.n_radial, cfg.cutoff)  # (E, R)
+    hz = params["species"][jnp.clip(z, 0, cfg.n_species - 1)]
+    m = _mlp_apply(
+        params["emb"], jnp.concatenate([hz[s], hz[d], rbf], -1), 1, final_act=True
+    )  # (E, h) directed messages
+    m = jnp.where(valid[:, None], m, 0)
+
+    # triplet geometry: t = (e_kj, e_ji) sharing middle node j
+    t = graph["triplets"]
+    t_valid = t[:, 0] != SENTINEL
+    e1 = jnp.where(t_valid, t[:, 0], 0)  # k->j
+    e2 = jnp.where(t_valid, t[:, 1], 0)  # j->i
+    v1 = -vec[e1]  # j->k direction
+    v2 = vec[e2]  # j->i direction
+    cosang = (v1 * v2).sum(-1) * jax.lax.rsqrt(
+        jnp.maximum((v1**2).sum(-1) * (v2**2).sum(-1), 1e-12)
+    )
+    sbf = _legendre_sbf(cosang, cfg.n_spherical)  # (T, S)
+    sbf_rbf = (sbf[:, :, None] * rbf[e2][:, None, :]).reshape(
+        t.shape[0], cfg.n_spherical * cfg.n_radial
+    )
+
+    out = jnp.zeros((n, cfg.d_hidden))
+    for i in range(cfg.n_blocks):
+        bp = params[f"block{i}"]
+        mt = _mlp_apply(bp["msg"], m, 1, final_act=True)  # transformed messages
+        a = sbf_rbf @ bp["sbf_proj"]  # (T, nb)
+        a = jnp.where(t_valid[:, None], a, 0)
+        inter = jnp.einsum("tb,bhf,th->tf", a, bp["bilinear"], mt[e1])
+        m = m * (rbf @ bp["rbf_proj"]) + segment_sum(inter, e2, m.shape[0])
+        m = jax.nn.silu(m)
+        m = jnp.where(valid[:, None], m, 0)
+        out = out + segment_sum(_mlp_apply(bp["out"], m, 1), d, n)
+    return _mlp_apply(params["out_final"], out, 2)
+
+
+# --------------------------------------------------------------------- #
+# host-side triplet builder (data plane)
+
+
+def build_triplets(edge_src: np.ndarray, edge_dst: np.ndarray, max_triplets: int):
+    """All (k->j, j->i) directed edge pairs with k != i, SENTINEL-padded."""
+    E = len(edge_src)
+    by_dst: dict = {}
+    for e in range(E):
+        if edge_src[e] == SENTINEL:
+            continue
+        by_dst.setdefault(int(edge_dst[e]), []).append(e)
+    tri = []
+    for e2 in range(E):
+        j = int(edge_src[e2])
+        i = int(edge_dst[e2])
+        if edge_src[e2] == SENTINEL:
+            continue
+        for e1 in by_dst.get(j, []):
+            if int(edge_src[e1]) != i:
+                tri.append((e1, e2))
+                if len(tri) >= max_triplets:
+                    break
+        if len(tri) >= max_triplets:
+            break
+    out = np.full((max_triplets, 2), SENTINEL, dtype=np.int32)
+    if tri:
+        out[: len(tri)] = np.asarray(tri, dtype=np.int32)
+    return out

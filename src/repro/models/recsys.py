@@ -1,0 +1,127 @@
+"""DIN — Deep Interest Network (Zhou et al. 2017), the assigned recsys arch.
+
+Config (paper table): embed_dim=18, user-history seq_len=100, attention MLP
+80-40, top MLP 200-80, interaction = target attention.
+
+The embedding layer is the hot path; JAX has no EmbeddingBag so it is built
+on the repro substrate:
+  - COLD path: jnp.take over the (V, D) table + segment-style masked sum —
+    always available, shards the vocab axis over the ``model`` mesh axis.
+  - HOT path: Moctopus labor division applied to tables — the top-K
+    most frequent ids live in a VMEM-resident tile bagged by the Pallas
+    embedding_bag kernel (kernels/embedding_bag.py); the long tail goes
+    through the cold path. (DESIGN §4, din row.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_stack
+
+SENTINEL = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    vocab_items: int = 1_000_000
+    vocab_cats: int = 10_000
+    embed_dim: int = 18
+    hist_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    top_mlp: tuple = (200, 80)
+    n_hot_rows: int = 0  # labor-division hot-row cache (0 = cold path only)
+
+
+def din_init(cfg: DINConfig, key):
+    ks = jax.random.split(key, 12)
+    D = cfg.embed_dim
+    # attention MLP input: [hist, target, hist-target, hist*target] over
+    # item+cat embeddings => 4 * 2D
+    attn_dims = [8 * D, *cfg.attn_mlp, 1]
+    # top MLP input: [user interest (2D), target (2D), interest*target (2D)]
+    top_dims = [6 * D, *cfg.top_mlp, 1]
+    p = {
+        "item_table": init_stack(ks[0], (cfg.vocab_items, D), fan_in_axis=-1),
+        "cat_table": init_stack(ks[1], (cfg.vocab_cats, D), fan_in_axis=-1),
+    }
+    for i in range(len(attn_dims) - 1):
+        p[f"attn_w{i}"] = init_stack(ks[2 + i], (attn_dims[i], attn_dims[i + 1]))
+        p[f"attn_b{i}"] = jnp.zeros((attn_dims[i + 1],))
+    for i in range(len(top_dims) - 1):
+        p[f"top_w{i}"] = init_stack(ks[6 + i], (top_dims[i], top_dims[i + 1]))
+        p[f"top_b{i}"] = jnp.zeros((top_dims[i + 1],))
+    return p
+
+
+def _embed(table, ids):
+    """Masked lookup: SENTINEL ids -> zero vectors (cold path)."""
+    valid = ids != SENTINEL
+    safe = jnp.where(valid, ids, 0)
+    return jnp.where(valid[..., None], table[safe], 0)
+
+
+def _mlp(p, prefix, x, n, act=jax.nn.sigmoid):
+    for i in range(n):
+        x = x @ p[f"{prefix}_w{i}"] + p[f"{prefix}_b{i}"]
+        if i < n - 1:
+            x = act(x)
+    return x
+
+
+def din_forward(cfg: DINConfig, params, batch):
+    """batch: hist_items (B, L), hist_cats (B, L), target_item (B,),
+    target_cat (B,). Returns logits (B,)."""
+    hi = _embed(params["item_table"], batch["hist_items"])  # (B, L, D)
+    hc = _embed(params["cat_table"], batch["hist_cats"])
+    h = jnp.concatenate([hi, hc], axis=-1)  # (B, L, 2D)
+    ti = _embed(params["item_table"], batch["target_item"])  # (B, D)
+    tc = _embed(params["cat_table"], batch["target_cat"])
+    t = jnp.concatenate([ti, tc], axis=-1)  # (B, 2D)
+    tL = jnp.broadcast_to(t[:, None, :], h.shape)
+    attn_in = jnp.concatenate([h, tL, h - tL, h * tL], axis=-1)  # (B, L, 8D)
+    n_attn = len(cfg.attn_mlp) + 1
+    scores = _mlp(params, "attn", attn_in, n_attn)[..., 0]  # (B, L)
+    mask = batch["hist_items"] != SENTINEL
+    scores = jnp.where(mask, scores, -1e30)
+    # DIN uses un-normalized sigmoid weights on valid positions (paper §4.3:
+    # no softmax, to keep interest intensity) — we follow that.
+    w = jax.nn.sigmoid(scores) * mask
+    interest = (h * w[..., None]).sum(axis=1)  # (B, 2D)
+    top_in = jnp.concatenate([interest, t, interest * t], axis=-1)
+    n_top = len(cfg.top_mlp) + 1
+    return _mlp(params, "top", top_in, n_top, act=lambda x: jax.nn.relu(x))[..., 0]
+
+
+def din_loss(cfg: DINConfig, params, batch):
+    logits = din_forward(cfg, params, batch)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def din_score_candidates(cfg: DINConfig, params, batch):
+    """retrieval_cand shape: ONE user history vs n_candidates items, batched
+    as a dot-product + MLP sweep (no per-candidate python loop).
+
+    batch: hist_items (1, L), hist_cats (1, L),
+           cand_items (C,), cand_cats (C,). Returns scores (C,).
+    """
+    C = batch["cand_items"].shape[0]
+    rep = {
+        "hist_items": jnp.broadcast_to(
+            batch["hist_items"], (C, batch["hist_items"].shape[1])
+        ),
+        "hist_cats": jnp.broadcast_to(
+            batch["hist_cats"], (C, batch["hist_cats"].shape[1])
+        ),
+        "target_item": batch["cand_items"],
+        "target_cat": batch["cand_cats"],
+    }
+    return din_forward(cfg, params, rep)

@@ -1,0 +1,64 @@
+"""Fanout neighbor sampler for the ``minibatch_lg`` shape (GraphSAGE-style).
+
+Host-side numpy (data plane): builds fixed-size SENTINEL-padded blocks per
+layer so the device step has static shapes. fanout=[15, 10] means each seed
+samples up to 15 in-neighbors, each of those up to 10, etc.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+SENTINEL = -1
+
+
+class NeighborSampler:
+    def __init__(self, src: np.ndarray, dst: np.ndarray, num_nodes: int, seed: int = 0):
+        # CSR over in-edges: sample the neighborhood that MESSAGES arrive from
+        order = np.argsort(dst, kind="stable")
+        self.nbr = src[order].astype(np.int64)
+        self.indptr = np.searchsorted(dst[order], np.arange(num_nodes + 1))
+        self.num_nodes = num_nodes
+        self.rng = np.random.default_rng(seed)
+
+    def sample_block(self, seeds: np.ndarray, fanout: int):
+        """Returns (edge_src, edge_dst) padded to len(seeds)*fanout."""
+        E = len(seeds) * fanout
+        es = np.full(E, SENTINEL, dtype=np.int64)
+        ed = np.full(E, SENTINEL, dtype=np.int64)
+        k = 0
+        for v in seeds:
+            if v == SENTINEL:
+                continue
+            lo, hi = self.indptr[v], self.indptr[v + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            take = min(fanout, deg)
+            idx = (
+                np.arange(lo, hi)
+                if deg <= fanout
+                else self.rng.choice(np.arange(lo, hi), fanout, replace=False)
+            )
+            es[k : k + take] = self.nbr[idx][:take]
+            ed[k : k + take] = v
+            k += take
+        return es, ed
+
+    def sample(self, seeds: np.ndarray, fanouts: Sequence[int]):
+        """Multi-layer sampling. Returns list of (edge_src, edge_dst) blocks,
+        outermost (largest) first, plus the full frontier node set."""
+        blocks: List[Tuple[np.ndarray, np.ndarray]] = []
+        frontier = np.asarray(seeds, dtype=np.int64)
+        all_nodes = [frontier]
+        for f in fanouts:
+            es, ed = self.sample_block(frontier, f)
+            blocks.append((es, ed))
+            nxt = np.unique(es[es != SENTINEL])
+            all_nodes.append(nxt)
+            frontier = nxt
+        blocks.reverse()  # process from the widest layer inwards
+        nodes = np.unique(np.concatenate(all_nodes))
+        return blocks, nodes

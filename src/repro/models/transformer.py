@@ -1,0 +1,265 @@
+"""Decoder-only transformer LMs: dense and MoE, GQA + RoPE + SWA + QKV bias.
+
+Covers the five assigned LM architectures (kimi-k2, mixtral, qwen2.5,
+stablelm, glm4). Layers are scanned (stacked parameters, lax.scan) so
+trillion-parameter configs lower to compact HLO; per-layer remat is a
+config flag. ``forward`` is the training path (flash attention over the
+full sequence); ``decode_step`` is the serving path (single token against
+a KV cache, optionally sequence-sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    apply_rope,
+    cross_entropy_loss,
+    decode_attention,
+    flash_attention,
+    init_stack,
+    rms_norm,
+    silu,
+)
+from repro.models.moe import MoEConfig, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window attention (Mixtral)
+    rope_theta: float = 10_000.0
+    rope_pct: float = 1.0
+    moe: Optional[MoEConfig] = None
+    dtype: str = "float32"
+    remat: bool = False
+    attn_chunk: int = 1024
+    # flops-accounting knobs: XLA cost_analysis counts a scan body ONCE, so
+    # the dry-run lowers unrolled L∈{1,2} variants to extrapolate true
+    # per-step FLOPs/bytes (launch/dryrun.py --acct)
+    scan_layers: bool = True
+    attn_unroll: bool = False
+    # §Perf-3: bf16 attention probabilities (f32 row stats + accumulation)
+    attn_p_bf16: bool = False
+
+    @property
+    def full_attention(self) -> bool:
+        return self.window is None
+
+    def param_count(self) -> int:
+        D, dh = self.d_model, self.d_head
+        attn = D * (self.n_heads * dh) * 2 + D * (self.n_kv_heads * dh) * 2
+        if self.moe:
+            ffn = self.moe.num_experts * 3 * D * self.moe.d_expert + D * self.moe.num_experts
+        else:
+            ffn = 3 * D * self.d_ff
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + 2 * self.vocab * D + D
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        D = self.d_model
+        dense_part = self.param_count() - self.n_layers * (
+            self.moe.num_experts * 3 * D * self.moe.d_expert
+        )
+        active_ffn = self.n_layers * self.moe.top_k * 3 * D * self.moe.d_expert
+        return dense_part + active_ffn
+
+
+# --------------------------------------------------------------------- #
+# init
+
+
+def init_params(cfg: TransformerConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    L, D, dh = cfg.n_layers, cfg.d_model, cfg.d_head
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    keys = jax.random.split(key, 16)
+    layers = {
+        "ln1": jnp.ones((L, D), dt),
+        "ln2": jnp.ones((L, D), dt),
+        "wq": init_stack(keys[0], (L, D, Hq * dh), dt),
+        "wk": init_stack(keys[1], (L, D, Hkv * dh), dt),
+        "wv": init_stack(keys[2], (L, D, Hkv * dh), dt),
+        "wo": init_stack(keys[3], (L, Hq * dh, D), dt),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, Hq * dh), dt)
+        layers["bk"] = jnp.zeros((L, Hkv * dh), dt)
+        layers["bv"] = jnp.zeros((L, Hkv * dh), dt)
+    if cfg.moe:
+        E, F = cfg.moe.num_experts, cfg.moe.d_expert
+        layers["router"] = init_stack(keys[4], (L, D, E), jnp.float32)
+        layers["we1"] = init_stack(keys[5], (L, E, D, F), dt)
+        layers["we3"] = init_stack(keys[6], (L, E, D, F), dt)
+        layers["we2"] = init_stack(keys[7], (L, E, F, D), dt, fan_in_axis=-2)
+    else:
+        layers["w1"] = init_stack(keys[8], (L, D, cfg.d_ff), dt)
+        layers["w3"] = init_stack(keys[9], (L, D, cfg.d_ff), dt)
+        layers["w2"] = init_stack(keys[10], (L, cfg.d_ff, D), dt)
+    return {
+        "embed": init_stack(keys[11], (cfg.vocab, D), dt, fan_in_axis=-1),
+        "layers": layers,
+        "ln_f": jnp.ones((D,), dt),
+        "lm_head": init_stack(keys[12], (D, cfg.vocab), dt),
+    }
+
+
+# --------------------------------------------------------------------- #
+# forward (training / prefill)
+
+
+def _attn_block(cfg: TransformerConfig, lp, x, positions):
+    B, S, D = x.shape
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rms_norm(x, lp["ln1"])
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = apply_rope(q.reshape(B, S, Hq, dh), positions, cfg.rope_theta, cfg.rope_pct)
+    k = apply_rope(k.reshape(B, S, Hkv, dh), positions, cfg.rope_theta, cfg.rope_pct)
+    v = v.reshape(B, S, Hkv, dh)
+    o = flash_attention(
+        q,
+        k,
+        v,
+        causal=True,
+        window=cfg.window,
+        chunk=min(cfg.attn_chunk, S),
+        unroll=cfg.attn_unroll,
+        p_bf16=cfg.attn_p_bf16,
+    )
+    return x + o.reshape(B, S, Hq * dh) @ lp["wo"]
+
+
+def _ffn_block(cfg: TransformerConfig, lp, x):
+    B, S, D = x.shape
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe:
+        flat = h.reshape(B * S, D)
+        out, aux = moe_ffn(
+            flat, lp["router"], lp["we1"], lp["we3"], lp["we2"], cfg.moe
+        )
+        return x + out.reshape(B, S, D), aux
+    y = silu(h @ lp["w1"]) * (h @ lp["w3"])
+    return x + y @ lp["w2"], jnp.zeros((), jnp.float32)
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: jnp.ndarray):
+    """tokens (B, S) -> logits (B, S, V), aux_loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+
+    def layer(carry, lp):
+        x, aux = carry
+        x = _attn_block(cfg, lp, x, positions)
+        x, a = _ffn_block(cfg, lp, x)
+        return (x, aux + a), None
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(
+            layer_fn, (x, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+    else:  # unrolled (flops-accounting variant)
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, _ = layer_fn(carry, lp)
+        x, aux = carry
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(cfg: TransformerConfig, params, batch):
+    logits, aux = forward(cfg, params, batch["tokens"])
+    return cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:]) + aux
+
+
+# --------------------------------------------------------------------- #
+# decode (serving)
+
+
+def init_decode_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    """KV cache; SWA caps the live window (circular buffer)."""
+    S = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.d_head)
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(cfg: TransformerConfig, params, cache, tokens, cur_len):
+    """One token for every sequence in the batch.
+
+    tokens (B,) int32; cur_len: scalar current length (same across batch).
+    Returns (logits (B, V), new_cache).
+    """
+    B = tokens.shape[0]
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    S_cache = cache["k"].shape[2]
+    write_pos = cur_len % S_cache if cfg.window else jnp.minimum(cur_len, S_cache - 1)
+    x = params["embed"][tokens]  # (B, D)
+    pos = jnp.full((B, 1), cur_len)
+
+    def layer(x, inp):
+        lp, kc, vc = inp
+        h = rms_norm(x, lp["ln1"])
+        q = h @ lp["wq"]
+        k = h @ lp["wk"]
+        v = h @ lp["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = apply_rope(
+            q.reshape(B, 1, Hq, dh), pos, cfg.rope_theta, cfg.rope_pct
+        )[:, 0]
+        k = apply_rope(
+            k.reshape(B, 1, Hkv, dh), pos, cfg.rope_theta, cfg.rope_pct
+        )[:, 0]
+        v = v.reshape(B, Hkv, dh)
+        kc = jax.lax.dynamic_update_slice(kc, k[:, None], (0, write_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, None], (0, write_pos, 0, 0))
+        live = jnp.minimum(cur_len + 1, S_cache)
+        o = decode_attention(q, kc, vc, live)
+        x = x + o @ lp["wo"]
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            out, _ = moe_ffn(
+                h2, lp["router"], lp["we1"], lp["we3"], lp["we2"], cfg.moe
+            )
+            x = x + out
+        else:
+            x = x + (silu(h2 @ lp["w1"]) * (h2 @ lp["w3"])) @ lp["w2"]
+        return x, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(
+            layer, x, (params["layers"], cache["k"], cache["v"])
+        )
+    else:  # unrolled (flops-accounting variant)
+        ks_list, vs_list = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (kc, vc) = layer(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_list.append(kc)
+            vs_list.append(vc)
+        ks, vs = jnp.stack(ks_list), jnp.stack(vs_list)
+    x = rms_norm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, {"k": ks, "v": vs}

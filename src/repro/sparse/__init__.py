@@ -1,0 +1,18 @@
+"""Sparse substrate: JAX has no CSR/CSC and no EmbeddingBag — this package
+builds the message-passing / ragged-reduce primitives the framework needs.
+
+- ell.py      : bounded-width ELL adjacency (the PIM-side format, DESIGN §2)
+- segment.py  : segment reduce helpers (sum/mean/max/min/softmax) over edge lists
+- coo.py      : COO edge-list utilities (dedup, sort, partition bucketing)
+"""
+
+from repro.sparse.ell import EllBlock, build_ell, ell_spmm_dense  # noqa: F401
+from repro.sparse.segment import (  # noqa: F401
+    segment_sum,
+    segment_mean,
+    segment_max,
+    segment_min,
+    segment_softmax,
+    segment_std,
+)
+from repro.sparse.coo import coo_dedup, sort_edges, bucket_by_partition  # noqa: F401

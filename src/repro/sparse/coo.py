@@ -1,0 +1,47 @@
+"""COO edge-list utilities (numpy, host-side data management layer).
+
+The Moctopus storage engine streams edges; these helpers canonicalize,
+dedup and bucket them. All run on the host (they belong to the data
+management plane, not the device compute plane).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sort_edges(src: np.ndarray, dst: np.ndarray):
+    """Lexicographic (src, dst) sort. Returns sorted copies."""
+    order = np.lexsort((dst, src))
+    return src[order], dst[order]
+
+
+def coo_dedup(src: np.ndarray, dst: np.ndarray):
+    """Remove duplicate (src, dst) pairs. Returns sorted unique edges."""
+    s, d = sort_edges(np.asarray(src), np.asarray(dst))
+    if len(s) == 0:
+        return s, d
+    keep = np.ones(len(s), dtype=bool)
+    keep[1:] = (s[1:] != s[:-1]) | (d[1:] != d[:-1])
+    return s[keep], d[keep]
+
+
+def bucket_by_partition(src, dst, partition_of: np.ndarray, num_partitions: int):
+    """Group edges by the partition of their *destination* node.
+
+    Returns list of (src_idx, dst_idx) arrays, one per partition. Used to
+    pre-bucket cross-partition traffic (the IPC plan, DESIGN §3).
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    part = partition_of[dst]
+    out = []
+    for p in range(num_partitions):
+        m = part == p
+        out.append((src[m], dst[m]))
+    return out
+
+
+def degree_counts(src, num_nodes: int) -> np.ndarray:
+    """Out-degree per node from an edge list."""
+    return np.bincount(np.asarray(src), minlength=num_nodes).astype(np.int64)

@@ -1,0 +1,141 @@
+"""Bounded-width ELL adjacency blocks.
+
+The PIM-side storage format (DESIGN §2): after labor-division removes rows
+with out-degree > tau, every remaining row fits in a fixed-width neighbor
+array ``cols[n_rows, width]`` padded with ``SENTINEL``. Warm rows
+(tau < deg <= warm cap) are stored in wider power-of-two ELL buckets, and
+rows beyond the cap are *split into virtual rows* — the count semiring makes
+splitting transparent (contributions add).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class EllBlock:
+    """One fixed-width ELL block.
+
+    rows:   int32[n] original row (source-node) ids, may repeat (virtual rows)
+    cols:   int32[n, width] neighbor ids, SENTINEL-padded
+    width:  python int
+    """
+
+    rows: np.ndarray
+    cols: np.ndarray
+
+    @property
+    def width(self) -> int:
+        return int(self.cols.shape[1]) if self.cols.ndim == 2 else 0
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.cols.shape[0])
+
+    def nnz(self) -> int:
+        return int((self.cols != SENTINEL).sum())
+
+
+def build_ell(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_nodes: int,
+    width: int,
+    row_subset: np.ndarray | None = None,
+) -> EllBlock:
+    """Build a single ELL block of fixed ``width`` from an edge list.
+
+    Rows with degree > width are split into multiple virtual rows.
+    ``row_subset``: if given, only edges whose src is in the subset are used.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if row_subset is not None:
+        mask = np.zeros(num_nodes, dtype=bool)
+        mask[row_subset] = True
+        keep = mask[src]
+        src, dst = src[keep], dst[keep]
+    if len(src) == 0:
+        return EllBlock(
+            rows=np.zeros((0,), np.int32), cols=np.zeros((0, width), np.int32)
+        )
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    # position of each edge within its row
+    row_start = np.searchsorted(src, src)  # first index of this src value
+    pos_in_row = np.arange(len(src)) - row_start
+    virt = pos_in_row // width  # virtual row index within the node
+    slot = pos_in_row % width
+    # assign a dense virtual-row id to each (src, virt) pair
+    key = src * (len(src) + 1) + virt  # unique per (src, virt)
+    uniq, vrow = np.unique(key, return_inverse=True)
+    n_vrows = len(uniq)
+    cols = np.full((n_vrows, width), SENTINEL, dtype=np.int32)
+    cols[vrow, slot] = dst.astype(np.int32)
+    rows = np.zeros(n_vrows, dtype=np.int32)
+    rows[vrow] = src.astype(np.int32)
+    return EllBlock(rows=rows, cols=cols)
+
+
+def build_tiered_ell(
+    src: np.ndarray,
+    dst: np.ndarray,
+    num_nodes: int,
+    cold_width: int = 16,
+    warm_max_width: int = 4096,
+) -> Tuple[EllBlock, List[EllBlock], np.ndarray]:
+    """Labor-division storage build (DESIGN §2 tiers T1/T2).
+
+    Returns (cold_block, warm_blocks, degree) where cold covers rows with
+    deg <= cold_width and warm_blocks are power-of-two width buckets
+    (2*cold_width .. warm_max_width) covering the rest (virtual-row split
+    beyond warm_max_width).
+    """
+    deg = np.bincount(np.asarray(src), minlength=num_nodes).astype(np.int64)
+    cold_rows = np.nonzero((deg > 0) & (deg <= cold_width))[0]
+    cold = build_ell(src, dst, num_nodes, cold_width, row_subset=cold_rows)
+    warm_blocks: List[EllBlock] = []
+    lo = cold_width
+    w = cold_width * 2
+    while True:
+        hi = min(w, warm_max_width)
+        if lo >= warm_max_width:
+            sel = np.nonzero(deg > warm_max_width)[0]
+        else:
+            sel = np.nonzero((deg > lo) & (deg <= hi))[0]
+        if len(sel) > 0:
+            warm_blocks.append(build_ell(src, dst, num_nodes, hi, row_subset=sel))
+        if lo >= warm_max_width:
+            break
+        lo = hi
+        w *= 2
+    return cold, warm_blocks, deg
+
+
+def ell_spmm_dense(frontier: jnp.ndarray, block: EllBlock, num_nodes: int):
+    """Reference expansion: out[b, j] += sum_{(i,s): cols[i,s]==j} frontier[b, rows[i]].
+
+    frontier: (B, num_nodes) float; returns (B, num_nodes) float.
+    Pure-jnp push-scatter (the Pallas kernel in kernels/ell_spmm.py is the
+    optimized version; this is the composable fallback).
+    """
+    if block.n_rows == 0:
+        return jnp.zeros_like(frontier)
+    rows = jnp.asarray(block.rows)
+    cols = jnp.asarray(block.cols)
+    width = block.width
+    src_vals = frontier[:, rows]  # (B, n_vrows)
+    flat_cols = cols.reshape(-1)  # (n_vrows*width,)
+    valid = flat_cols != SENTINEL
+    safe_cols = jnp.where(valid, flat_cols, 0)
+    contrib = jnp.repeat(src_vals, width, axis=1)  # (B, n_vrows*width)
+    contrib = jnp.where(valid[None, :], contrib, 0.0)
+    out = jnp.zeros_like(frontier)
+    return out.at[:, safe_cols].add(contrib)

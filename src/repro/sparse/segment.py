@@ -1,0 +1,65 @@
+"""Segment-reduce primitives over edge lists.
+
+JAX exposes ``jax.ops.segment_sum``/``segment_max`` but no mean/std/softmax;
+GNN message passing and the EmbeddingBag substrate are built on these.
+All functions take ``data`` with leading axis = number of elements and
+``segment_ids`` mapping each element to its output row.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+_POS_INF = 1e30
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_count(segment_ids, num_segments: int, dtype=jnp.float32):
+    ones = jnp.ones(segment_ids.shape[:1], dtype=dtype)
+    return jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments: int, eps: float = 1e-12):
+    total = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_count(segment_ids, num_segments, dtype=total.dtype)
+    cnt = cnt.reshape(cnt.shape + (1,) * (total.ndim - cnt.ndim))
+    return total / jnp.maximum(cnt, eps)
+
+
+def segment_max(data, segment_ids, num_segments: int):
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_min(data, segment_ids, num_segments: int):
+    return jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+
+
+def segment_std(data, segment_ids, num_segments: int, eps: float = 1e-5):
+    """Per-segment standard deviation (PNA's ``std`` aggregator)."""
+    mean = segment_mean(data, segment_ids, num_segments)
+    sq_mean = segment_mean(data * data, segment_ids, num_segments)
+    var = sq_mean - mean * mean
+    return jnp.sqrt(jnp.maximum(var, 0.0) + eps)
+
+
+def segment_softmax(logits, segment_ids, num_segments: int):
+    """Numerically-stable softmax within each segment (GAT edge softmax)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    denom = jax.ops.segment_sum(exp, segment_ids, num_segments=num_segments)
+    return exp / jnp.maximum(denom[segment_ids], 1e-12)
+
+
+def segment_logsumexp(logits, segment_ids, num_segments: int):
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    exp = jnp.exp(logits - seg_max[segment_ids])
+    s = jax.ops.segment_sum(exp, segment_ids, num_segments=num_segments)
+    return jnp.log(jnp.maximum(s, 1e-30)) + seg_max

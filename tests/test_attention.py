@@ -1,0 +1,101 @@
+"""flash_attention (scan/online-softmax) vs a naive dense oracle."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import apply_rope, decode_attention, flash_attention
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    s = np.einsum("bqhgd,bkhd->bqhgk", np.asarray(qg, np.float64), np.asarray(k, np.float64))
+    s /= math.sqrt(dh)
+    qpos = np.arange(Sq)[:, None]
+    kpos = np.arange(Sk)[None, :]
+    mask = kpos <= qpos if causal else np.ones((Sq, Sk), bool)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = np.where(mask[None, :, None, None, :], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bqhgk,bkhd->bqhgd", p, np.asarray(v, np.float64))
+    return out.reshape(B, Sq, Hq, dh)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2)])
+def test_flash_matches_naive(window, chunk, Hq, Hkv):
+    rng = np.random.default_rng(chunk + Hq)
+    B, S, dh = 2, 33, 8  # odd S exercises chunk padding
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v, causal=True, window=window, chunk=chunk))
+    ref = naive_attention(np.asarray(q), np.asarray(k), np.asarray(v), window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_unroll_matches_scan():
+    rng = np.random.default_rng(0)
+    B, S, H, dh = 1, 24, 2, 4
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    a = flash_attention(q, k, v, chunk=8, unroll=False)
+    b = flash_attention(q, k, v, chunk=8, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_flash_p_bf16_close_to_f32():
+    rng = np.random.default_rng(1)
+    B, S, H, dh = 1, 32, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    a = flash_attention(q, k, v, chunk=8)
+    b = flash_attention(q, k, v, chunk=8, p_bf16=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-2)
+
+
+def test_decode_attention_matches_last_row_of_full():
+    rng = np.random.default_rng(2)
+    B, S, Hq, Hkv, dh = 2, 12, 4, 2, 8
+    q_all = jnp.asarray(rng.standard_normal((B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    full = flash_attention(q_all, k, v, causal=True, chunk=4)
+    dec = decode_attention(q_all[:, -1], k, v, cur_len=S)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full[:, -1]).reshape(B, Hq * dh), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 6, 2, 8)), jnp.float32)
+    pos = jnp.arange(6)[None, :]
+    r = apply_rope(x, pos)
+    np.testing.assert_allclose(  # rotations preserve norms
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 8)), jnp.float32)
+
+    def dot(i, j):
+        qi = apply_rope(q, jnp.array([[i]]))
+        kj = apply_rope(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot(3, 1) - dot(7, 5)) < 1e-4
+    assert abs(dot(2, 2) - dot(9, 9)) < 1e-4

@@ -1,0 +1,239 @@
+"""Distributed substrate: sharding rules, compression, elastic rescale.
+
+True multi-device SPMD behavior (collectives, pipeline) runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 so the
+main test process keeps its single-device view (see test_spmd_subprocess).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.distributed import compression as comp
+from repro.distributed.elastic import rescale
+from repro.distributed.sharding_rules import (
+    lm_batch_specs,
+    lm_cache_specs,
+    lm_param_specs,
+    opt_state_specs,
+)
+from repro.core.partition import MoctopusPartitioner, PartitionConfig
+from repro.data.graphs import make_road_graph
+from repro.models import transformer as tf_mod
+from repro.optim import adamw_init
+
+
+class _FakeMesh:
+    """Axis-name/shape stand-in (sharding rules only need names + sizes)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def test_lm_param_specs_cover_every_leaf():
+    mesh = _FakeMesh(data=16, model=16)
+    for arch in ["kimi-k2-1t-a32b", "mixtral-8x7b", "qwen2.5-3b", "glm4-9b"]:
+        cfg = get_arch(arch).make_config()
+        shapes = jax.eval_shape(
+            lambda key: tf_mod.init_params(cfg, key), jax.random.PRNGKey(0)
+        )
+        specs = lm_param_specs(cfg, mesh)
+        # structural match + every sharded dim divisible
+        def check(spec, sds):
+            parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+            for s, dim in zip(parts, sds.shape):
+                if s is None:
+                    continue
+                axes = (s,) if isinstance(s, str) else s
+                size = int(np.prod([mesh.shape[a] for a in axes]))
+                assert dim % size == 0, (arch, spec, sds.shape)
+
+        jax.tree.map(check, specs, shapes)
+
+
+def test_kimi_experts_sharded_mixtral_tp_fallback():
+    mesh = _FakeMesh(data=16, model=16)
+    kimi = lm_param_specs(get_arch("kimi-k2-1t-a32b").make_config(), mesh)
+    assert kimi["layers"]["we1"] == P(None, "model", None, None)  # EP: 384 % 16
+    mix = lm_param_specs(get_arch("mixtral-8x7b").make_config(), mesh)
+    assert mix["layers"]["we1"] == P(None, None, None, "model")  # E=8 < 16 -> TP
+
+
+def test_zero_opt_specs_add_data_axis():
+    mesh = _FakeMesh(data=16, model=16)
+    cfg = get_arch("glm4-9b").make_config()
+    shapes = jax.eval_shape(
+        lambda key: tf_mod.init_params(cfg, key), jax.random.PRNGKey(0)
+    )
+    pspecs = lm_param_specs(cfg, mesh)
+    ospecs = opt_state_specs(pspecs, shapes, mesh)
+    # wq (L, D, H*dh): params shard dim2 over model; opt m adds data on D
+    assert ospecs.m["layers"]["wq"] == P(None, "data", "model")
+    assert ospecs.step == P()
+
+
+def test_cache_specs_modes():
+    mesh = _FakeMesh(pod=2, data=16, model=16)
+    cfg = get_arch("glm4-9b").make_config()
+    sp = lm_cache_specs(cfg, mesh, batch=128)
+    assert sp["k"] == P(None, ("pod", "data"), "model", None, None)
+    sp1 = lm_cache_specs(cfg, mesh, batch=1)
+    assert sp1["k"] == P(None, None, ("data", "model"), None, None)
+    bsp = lm_batch_specs(mesh)
+    assert bsp["tokens"] == P(("pod", "data"), None)
+
+
+# ------------------------------------------------------------------ #
+# compression
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    q, s = comp.quantize_int8(x)
+    deq = comp.dequantize_int8(q[None], s)[0]
+    err = np.abs(np.asarray(deq - x)).max()
+    assert err <= float(s[0]) / 2 + 1e-6  # half-ULP of the int8 grid
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Sum of decompressed grads -> sum of true grads (EF guarantee)."""
+    rng = np.random.default_rng(1)
+    true_sum = jnp.zeros(256)
+    deq_sum = jnp.zeros(256)
+    grads = {"g": jnp.zeros(256)}
+    state = comp.ef_init(grads)
+    for t in range(30):
+        g = {"g": jnp.asarray(rng.standard_normal(256).astype(np.float32))}
+        qs, state = comp.ef_compress(g, state)
+        deq = comp.ef_decompress(qs)
+        true_sum = true_sum + g["g"]
+        deq_sum = deq_sum + deq["g"]
+    # residual carries the outstanding error; totals match within it
+    gap = np.abs(np.asarray(deq_sum + state.residual["g"] - true_sum)).max()
+    assert gap < 1e-4
+
+
+# ------------------------------------------------------------------ #
+# elastic rescale
+
+
+@pytest.mark.parametrize("new_P", [4, 16])
+def test_elastic_rescale_preserves_invariants(new_P):
+    src, dst, n = make_road_graph(2000, seed=0)
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=8))
+    part.on_edges(src, dst)
+    part.migration_pass(src, dst)
+    newp, report = rescale(part, new_P, src, dst)
+    assert newp.config.num_partitions == new_P
+    placed = newp.partition_of[newp.partition_of >= 0]
+    assert (placed < new_P).all()
+    assert newp.counts.sum() == newp.n_assigned_pim
+    assert report.load_balance_after < 1.6
+    # rescale must not lose nodes
+    assert (newp.partition_of >= 0).sum() + (newp.partition_of == -2).sum() == (
+        part.partition_of >= 0
+    ).sum() + (part.partition_of == -2).sum()
+
+
+# ------------------------------------------------------------------ #
+# SPMD behavior on 8 virtual devices (subprocess isolation)
+
+_SPMD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.collectives import or_allreduce, max_allreduce, allreduce_rs_ag
+    from repro.distributed import compression as comp
+    from repro.distributed.pipeline import gpipe_forward
+
+    mesh = jax.make_mesh((8,), ("x",))
+
+    # --- butterfly OR all-reduce
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2**32, (8, 16), dtype=np.uint32)
+    f = jax.shard_map(
+        lambda x: or_allreduce(x, "x", 8), mesh=mesh,
+        in_specs=P("x"), out_specs=P("x"), check_vma=False)
+    out = np.asarray(f(jnp.asarray(bits)))
+    expect = np.bitwise_or.reduce(bits, axis=0)
+    assert (out == expect[None]).all(), "or_allreduce mismatch"
+
+    # --- rs+ag allreduce exactness (fp32) and int8 error bound
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    g = jax.shard_map(
+        lambda v: allreduce_rs_ag(v[0], "x", 8)[None], mesh=mesh,
+        in_specs=P("x"), out_specs=P("x"), check_vma=False)
+    got = np.asarray(g(jnp.asarray(x)))
+    ref = x.sum(axis=0)
+    assert np.allclose(got, ref[None], rtol=1e-5, atol=1e-5), "rs_ag mismatch"
+
+    qpair = (comp.quantize_int8, comp.dequantize_int8)
+    gq = jax.shard_map(
+        lambda v: allreduce_rs_ag(v[0], "x", 8, quantize=qpair)[None], mesh=mesh,
+        in_specs=P("x"), out_specs=P("x"), check_vma=False)
+    gotq = np.asarray(gq(jnp.asarray(x)))
+    scale = np.abs(ref).max() / 127
+    assert np.abs(gotq - ref[None]).max() < scale + 1e-5, "quantized rs_ag error"
+
+    # --- gpipe: 4 stages, each multiplies by (stage+2); M=6 microbatches
+    mesh4 = jax.make_mesh((4,), ("p",))
+    mb = rng.standard_normal((6, 2, 3)).astype(np.float32)
+    stage_scale = np.arange(4, dtype=np.float32) + 2
+
+    def stage_fn(scale, x):
+        return x * scale
+
+    def run(scales, m):
+        o = gpipe_forward(stage_fn, scales[0], m, "p", 4)
+        return jax.lax.psum(o, "p")  # outs live on the last stage only
+
+    pf = jax.shard_map(run, mesh=mesh4, in_specs=(P("p"), P()),
+                       out_specs=P(), check_vma=False)
+    outs = np.asarray(pf(jnp.asarray(stage_scale), jnp.asarray(mb)))
+    expect = mb * np.prod(stage_scale)
+    assert np.allclose(outs, expect, rtol=1e-5), (
+        "gpipe mismatch: %s vs %s" % (outs[0, 0], expect[0, 0]))
+
+    # --- gradients flow through the pipeline (ppermute is differentiable):
+    # loss = mean(prod(scales) * mb) => dloss/dscale_s = mean(mb) * prod(others)
+    def loss_fn(scales, m):
+        def run_loss(sc, mm):
+            o = gpipe_forward(stage_fn, sc[0], mm, "p", 4)
+            return jax.lax.psum(jnp.where(jax.lax.axis_index("p") == 3,
+                                          o.mean(), 0.0), "p")
+        return jax.shard_map(run_loss, mesh=mesh4, in_specs=(P("p"), P()),
+                             out_specs=P(), check_vma=False)(scales, m)
+
+    g = np.asarray(jax.grad(loss_fn)(jnp.asarray(stage_scale), jnp.asarray(mb)))
+    expect_g = np.array([mb.mean() * np.prod(stage_scale) / s for s in stage_scale])
+    assert np.allclose(g, expect_g, rtol=1e-4), (g, expect_g)
+    print("SPMD_OK")
+    """
+)
+
+
+def test_spmd_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    r = subprocess.run(
+        [sys.executable, "-c", _SPMD_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+    assert "SPMD_OK" in r.stdout

@@ -1,0 +1,107 @@
+"""Dry-run tooling units: HLO collective parser + semiring helpers.
+
+(The heavyweight 512-device dry-run itself runs via
+`python -m repro.launch.dryrun`; importing that module inside the test
+process would pin XLA to 512 host devices, so the parser is imported
+surgically without triggering jax re-init — the env flag only matters at
+first jax use, which already happened.)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.semiring import (
+    bool_matmul_ref,
+    pack_bits,
+    packed_width,
+    saturate,
+    unpack_bits,
+)
+
+
+def _parser():
+    import jax
+
+    jax.devices()  # lock the single-device backend BEFORE dryrun sets XLA_FLAGS
+    from repro.launch.dryrun import collective_bytes
+
+    return collective_bytes
+
+
+_HLO = """
+HloModule jit_step
+  %ar = f32[256,1024]{1,0} all-reduce(f32[256,1024]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[32,64]{1,0} all-gather(bf16[16,64]{1,0} %y), dimensions={0}
+  %cp = u32[8,128]{1,0} collective-permute(u32[8,128]{1,0} %z), source_target_pairs={{0,1}}
+  %rs = f32[64]{0} reduce-scatter(f32[512]{0} %w), dimensions={0}
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%p, %q), dimensions={0}
+  %start = f32[100]{0} all-reduce-start(f32[100]{0} %m)
+  %done = f32[100]{0} all-reduce-done(f32[100]{0} %start)
+  %not_a_collective = f32[9]{0} add(f32[9]{0} %a, f32[9]{0} %b)
+"""
+
+
+def test_collective_parser_sums_result_bytes():
+    totals = _parser()(_HLO)
+    counts = totals.pop("_counts")
+    assert totals["all-reduce"] == 256 * 1024 * 4 + 100 * 4  # incl. -start once
+    assert totals["all-gather"] == 32 * 64 * 2
+    assert totals["collective-permute"] == 8 * 128 * 4
+    assert totals["reduce-scatter"] == 64 * 4
+    assert totals["all-to-all"] == 2 * 16 * 4  # tuple shapes both counted
+    assert counts["all-reduce"] == 2
+    assert "add" not in totals
+
+
+def test_collective_parser_ignores_done_ops():
+    totals = _parser()("%d = f32[10]{0} all-reduce-done(f32[10]{0} %s)\n")
+    totals.pop("_counts")
+    assert totals.get("all-reduce", 0) == 0
+
+
+# ---------------------------------------------------------------- #
+# semiring helpers
+
+
+def test_packed_width():
+    assert packed_width(1) == 1
+    assert packed_width(32) == 1
+    assert packed_width(33) == 2
+
+
+def test_bool_matmul_ref_is_boolean_semiring():
+    rng = np.random.default_rng(0)
+    f = rng.random((4, 6)) < 0.5
+    a = rng.random((6, 5)) < 0.5
+    out = np.asarray(bool_matmul_ref(jnp.asarray(f), jnp.asarray(a)))
+    ref = np.zeros((4, 5), bool)
+    for i in range(4):
+        for j in range(5):
+            ref[i, j] = any(f[i, k] and a[k, j] for k in range(6))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_saturate_caps_counts():
+    x = jnp.asarray([0.0, 0.5, 1.0, 7.0])
+    np.testing.assert_allclose(np.asarray(saturate(x)), [0, 0.5, 1, 1])
+
+
+def test_pack_unpack_multi_leading_dims():
+    rng = np.random.default_rng(1)
+    x = rng.random((2, 3, 70)) < 0.4
+    p = pack_bits(jnp.asarray(x))
+    assert p.shape == (2, 3, 3)
+    np.testing.assert_array_equal(np.asarray(unpack_bits(p, 70)), x)
+
+
+def test_collective_parser_tuple_with_index_comments():
+    """Tuple shapes carry /*index=N*/ comments past 5 elements — the
+    all_to_all of the sparse engine regressed on this once."""
+    hlo = (
+        "%a2a = (s32[1,8]{1,0}, s32[1,8]{1,0}, s32[1,8]{1,0}, s32[1,8]{1,0},"
+        " s32[1,8]{1,0}, /*index=5*/s32[1,8]{1,0}) all-to-all(%x), dimensions={0}\n"
+    )
+    totals = _parser()(hlo)
+    totals.pop("_counts")
+    assert totals["all-to-all"] == 6 * 8 * 4

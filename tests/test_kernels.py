@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import pack_bits, pack_bits_np, unpack_bits_np
+from repro.kernels import ops, ref
+from repro.kernels.ref import SENTINEL
+
+
+# ------------------------------------------------------------------ #
+# bitmap_spmm
+
+
+@pytest.mark.parametrize("B", [1, 8, 32])
+@pytest.mark.parametrize("k", [1, 31, 64, 100])
+@pytest.mark.parametrize("n", [128, 512])
+def test_bitmap_spmm_sweep(B, k, n):
+    rng = np.random.default_rng(B * 1000 + k + n)
+    K = ((k + 7) // 8) * 8  # padded row count
+    f_bits = rng.random((B, K)) < 0.3
+    f_bits[:, k:] = False
+    a_bits = rng.random((K, n)) < 0.05
+    fp = jnp.asarray(pack_bits_np(f_bits))
+    ap = jnp.asarray(pack_bits_np(a_bits))
+    out = np.asarray(ops.bitmap_spmm(fp, ap, k))
+    expect = np.asarray(ref.bitmap_spmm_ref(fp, ap, k))
+    np.testing.assert_array_equal(out, expect)
+    # semantic cross-check vs float matmul
+    dense = (f_bits[:, :k].astype(np.float32) @ a_bits[:k].astype(np.float32)) > 0
+    np.testing.assert_array_equal(unpack_bits_np(out, n), dense)
+
+
+def test_bitmap_spmm_k_zero():
+    fp = jnp.zeros((4, 1), jnp.uint32)
+    ap = jnp.zeros((8, 4), jnp.uint32)
+    out = ops.bitmap_spmm(fp, ap, 0)
+    assert out.shape == (4, 4)
+    assert not np.asarray(out).any()
+
+
+# ------------------------------------------------------------------ #
+# ell_pull
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("B,N,W", [(4, 64, 4), (16, 256, 16), (3, 100, 7), (128, 512, 16)])
+def test_ell_pull_sweep(B, N, W, dtype):
+    rng = np.random.default_rng(B * 31 + N + W)
+    f = rng.integers(0, 3, (B, N)).astype(dtype)
+    in_ell = rng.integers(0, N, (N, W)).astype(np.int32)
+    in_ell[rng.random((N, W)) < 0.4] = SENTINEL
+    out = np.asarray(ops.ell_pull(jnp.asarray(f), jnp.asarray(in_ell)))
+    expect = np.asarray(ref.ell_pull_ref(jnp.asarray(f), jnp.asarray(in_ell)))
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+    # independent dense oracle
+    A = np.zeros((N, N), dtype=np.float64)
+    for j in range(N):
+        for s in range(W):
+            i = in_ell[j, s]
+            if i != SENTINEL:
+                A[i, j] += 1
+    np.testing.assert_allclose(out, (f.astype(np.float64) @ A).astype(out.dtype))
+
+
+def test_ell_pull_empty_width():
+    f = jnp.ones((4, 32))
+    in_ell = jnp.zeros((32, 0), jnp.int32)
+    out = ops.ell_pull(f, in_ell)
+    assert not np.asarray(out).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    n=st.integers(1, 70),
+    w=st.integers(1, 9),
+    seed=st.integers(0, 10_000),
+)
+def test_property_ell_pull_any_shape(b, n, w, seed):
+    rng = np.random.default_rng(seed)
+    f = rng.standard_normal((b, n)).astype(np.float32)
+    in_ell = rng.integers(-1, n, (n, w)).astype(np.int32)
+    out = np.asarray(ops.ell_pull(jnp.asarray(f), jnp.asarray(in_ell)))
+    expect = np.asarray(ref.ell_pull_ref(jnp.asarray(f), jnp.asarray(in_ell)))
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# embedding_bag
+
+
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("V,D,B,L", [(32, 8, 4, 3), (256, 64, 64, 20), (100, 18, 7, 5)])
+def test_embedding_bag_sweep(V, D, B, L, mode):
+    rng = np.random.default_rng(V + D + B + L)
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    ids = rng.integers(0, V, (B, L)).astype(np.int32)
+    ids[rng.random((B, L)) < 0.3] = SENTINEL
+    out = np.asarray(ops.embedding_bag(jnp.asarray(table), jnp.asarray(ids), mode=mode))
+    expect = np.asarray(
+        ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids), mode=mode)
+    )
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_embedding_bag_all_padding_row():
+    table = jnp.ones((8, 4), jnp.float32)
+    ids = jnp.full((2, 3), SENTINEL, jnp.int32)
+    out = np.asarray(ops.embedding_bag(table, ids, mode="mean"))
+    assert not out.any()
+
+
+def test_embedding_bag_big_table_falls_back():
+    """Tables beyond the VMEM budget must route to the jnp path."""
+    table = jnp.ones((200_000, 16), jnp.float32)  # 12.8 MB > 8 MB budget
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 200_000, (4, 5)), jnp.int32)
+    out = np.asarray(ops.embedding_bag(table, ids))
+    np.testing.assert_allclose(out, 5 * np.ones((4, 16)), rtol=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# packing round-trips
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 200), b=st.integers(1, 5), seed=st.integers(0, 999))
+def test_property_pack_unpack_roundtrip(n, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.random((b, n)) < 0.5
+    packed = pack_bits_np(x)
+    assert packed.shape == (b, (n + 31) // 32)
+    np.testing.assert_array_equal(unpack_bits_np(packed, n), x)
+    # jnp path agrees
+    np.testing.assert_array_equal(np.asarray(pack_bits(jnp.asarray(x))), packed)

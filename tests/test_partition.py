@@ -1,0 +1,138 @@
+"""Partitioner invariants (paper §3.2) — unit + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as pmod
+from repro.core.partition import (
+    HOST,
+    UNASSIGNED,
+    MoctopusPartitioner,
+    PartitionConfig,
+    PIMHashPartitioner,
+)
+from repro.data.graphs import make_rmat_graph, make_road_graph
+
+
+def _edge_batches(src, dst, batch=1024):
+    for i in range(0, len(src), batch):
+        yield src[i : i + batch], dst[i : i + batch]
+
+
+def test_all_touched_nodes_assigned():
+    src, dst, n = make_rmat_graph(2000, avg_degree=6, seed=0)
+    p = MoctopusPartitioner(n, PartitionConfig(num_partitions=8))
+    for s, d in _edge_batches(src, dst):
+        p.on_edges(s, d)
+    touched = np.unique(np.concatenate([src, dst]))
+    assert (p.partition_of[touched] != UNASSIGNED).all()
+
+
+def test_labor_division_no_high_degree_on_pim():
+    """Paper §3.2.1: PIM modules never hold nodes with out-degree > tau."""
+    src, dst, n = make_rmat_graph(2000, avg_degree=16, seed=1)
+    cfg = PartitionConfig(num_partitions=8, high_degree_threshold=16)
+    p = MoctopusPartitioner(n, cfg)
+    for s, d in _edge_batches(src, dst, 512):
+        p.on_edges(s, d)
+    pim = p.partition_of >= 0
+    assert (p.out_degree[pim] <= cfg.high_degree_threshold).all()
+    assert p.stats["host_promotions"] > 0  # skew actually exercised the path
+
+
+def test_dynamic_capacity_constraint():
+    """No partition exceeds the 1.05x dynamic capacity (up to one node slack
+    at assignment time, since capacity grows with n_assigned)."""
+    src, dst, n = make_rmat_graph(4000, avg_degree=4, seed=2)
+    cfg = PartitionConfig(num_partitions=8, capacity_factor=1.05)
+    p = MoctopusPartitioner(n, cfg)
+    for s, d in _edge_batches(src, dst, 256):
+        p.on_edges(s, d)
+    assert p.counts.sum() == p.n_assigned_pim
+    assert p.counts.max() <= p.capacity() + 1
+    assert p.load_balance() <= cfg.capacity_factor + 0.10
+
+
+def test_locality_beats_hash_on_road_graph():
+    """The whole point (Fig. 5): radical greedy + migration preserves
+    locality far better than hash partitioning on road networks."""
+    src, dst, n = make_road_graph(3000, seed=3)
+    cfg = PartitionConfig(num_partitions=8)
+    moc = MoctopusPartitioner(n, cfg)
+    hsh = PIMHashPartitioner(n, PartitionConfig(num_partitions=8))
+    for s, d in _edge_batches(src, dst, 512):
+        moc.on_edges(s, d)
+        hsh.on_edges(s, d)
+    moc.migration_pass(src, dst)
+    loc_moc = moc.edge_locality(src, dst)
+    loc_hash = hsh.edge_locality(src, dst)
+    assert loc_moc > 2 * loc_hash
+    assert moc.crossing_edges(src, dst) < hsh.crossing_edges(src, dst)
+
+
+def test_migration_improves_locality():
+    src, dst, n = make_road_graph(2000, seed=4)
+    p = MoctopusPartitioner(n, PartitionConfig(num_partitions=4))
+    for s, d in _edge_batches(src, dst, 128):
+        p.on_edges(s, d)
+    before = p.edge_locality(src, dst)
+    moved = p.migration_pass(src, dst)
+    after = p.edge_locality(src, dst)
+    assert after >= before
+    if moved:
+        assert after > before - 1e-9
+
+
+def test_migration_respects_capacity():
+    src, dst, n = make_road_graph(1500, seed=5)
+    cfg = PartitionConfig(num_partitions=4, capacity_factor=1.05)
+    p = MoctopusPartitioner(n, cfg)
+    p.on_edges(src, dst)
+    p.migration_pass(src, dst)
+    assert p.counts.max() <= p.capacity() + 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    edges=st.lists(
+        st.tuples(st.integers(0, 60), st.integers(0, 60)),
+        min_size=1,
+        max_size=300,
+    ),
+    P=st.integers(1, 7),
+    tau=st.integers(1, 8),
+)
+def test_property_partitioner_invariants(edges, P, tau):
+    """For ANY edge stream: counts consistent, placements in range,
+    labor division holds, hash baseline covers the same nodes."""
+    src = np.array([e[0] for e in edges])
+    dst = np.array([e[1] for e in edges])
+    cfg = PartitionConfig(num_partitions=P, high_degree_threshold=tau)
+    p = MoctopusPartitioner(65, cfg)
+    for s, d in _edge_batches(src, dst, 16):
+        p.on_edges(s, d)
+        p.migration_pass(s, d)
+    # 1. every touched node is placed
+    touched = np.unique(np.concatenate([src, dst]))
+    assert (p.partition_of[touched] != UNASSIGNED).all()
+    # 2. placements are valid partition ids or HOST
+    placed = p.partition_of[touched]
+    assert ((placed >= 0) & (placed < P) | (placed == HOST)).all()
+    # 3. counts match the assignment vector
+    for q in range(P):
+        assert p.counts[q] == (p.partition_of == q).sum()
+    # 4. labor division: PIM nodes have out-degree <= tau
+    pim = p.partition_of >= 0
+    assert (p.out_degree[pim] <= tau).all()
+    # 5. degrees match the stream
+    ref_deg = np.bincount(src, minlength=65)
+    assert (p.out_degree == ref_deg).all()
+
+
+def test_hash_partitioner_is_degree_blind():
+    src, dst, n = make_rmat_graph(1000, avg_degree=16, seed=6)
+    p = PIMHashPartitioner(n, PartitionConfig(num_partitions=8))
+    p.on_edges(src, dst)
+    assert (p.partition_of[np.unique(src)] >= 0).all()  # no HOST promotions
+    assert p.migration_pass(src, dst) == 0

@@ -1,0 +1,100 @@
+"""RPQ compiler properties: language equivalence against Python's ``re``.
+
+For random small regexes and random label words, the compiled NFA must
+accept exactly the words the equivalent Python regex accepts — checked by
+running the engine's path semantics on a line graph whose edge labels spell
+the word (reach the last node <=> word in L(pattern))."""
+
+import re
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import rpq_local
+from repro.core.rpq import WILDCARD, compile_rpq, khop_query
+
+LABELS = ["a", "b", "c"]
+
+
+def _accepts(plan, word):
+    """Run the plan over a line graph spelling `word`."""
+    n = len(word) + 1
+    edges = {}
+    for i, lab in enumerate(word):
+        edges.setdefault(lab, ([], []))
+        edges[lab][0].append(i)
+        edges[lab][1].append(i + 1)
+    edict = {k: (np.array(s), np.array(d)) for k, (s, d) in edges.items()}
+    out = rpq_local(plan, edict, n, np.array([0]), max_iters=4 * n + 4)
+    return bool(out[0, n - 1]) if len(word) else bool(out[0, 0])
+
+
+def _to_python_re(pattern: str) -> str:
+    toks = pattern.replace("/", " ")
+    out = []
+    for ch in toks:
+        if ch == WILDCARD:
+            out.append("[abc]")
+        elif ch == " ":
+            continue
+        else:
+            out.append(ch)
+    return "".join(out)
+
+
+# random regex ASTs rendered to the RPQ syntax
+@st.composite
+def regexes(draw, depth=0):
+    if depth > 2:
+        return draw(st.sampled_from(LABELS + [WILDCARD]))
+    kind = draw(st.sampled_from(["sym", "cat", "alt", "star", "opt", "plus"]))
+    if kind == "sym":
+        return draw(st.sampled_from(LABELS + [WILDCARD]))
+    if kind == "cat":
+        return f"{draw(regexes(depth + 1))} {draw(regexes(depth + 1))}"
+    if kind == "alt":
+        return f"({draw(regexes(depth + 1))} | {draw(regexes(depth + 1))})"
+    inner = draw(regexes(depth + 1))
+    return f"({inner}){'*' if kind == 'star' else '?' if kind == 'opt' else '+'}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(pattern=regexes(), word=st.lists(st.sampled_from(LABELS), max_size=5))
+def test_property_compiler_matches_python_re(pattern, word):
+    plan = compile_rpq(pattern)
+    pyre = re.compile(_to_python_re(pattern) + r"\Z")
+    expect = pyre.match("".join(word)) is not None
+    got = _accepts(plan, word)
+    assert got == expect, (pattern, word, plan)
+
+
+@pytest.mark.parametrize(
+    "pattern,accepted,rejected",
+    [
+        ("a b", ["ab"], ["a", "abb", ""]),
+        ("a*", ["", "a", "aaa"], ["b", "ab"]),
+        ("a+ b?", ["a", "ab", "aa"], ["", "b"]),
+        ("(a | b) c", ["ac", "bc"], ["c", "ab"]),
+        ("_ _", ["ab", "ca"], ["a", "abc"]),
+    ],
+)
+def test_compiler_examples(pattern, accepted, rejected):
+    plan = compile_rpq(pattern)
+    for w in accepted:
+        assert _accepts(plan, list(w)), (pattern, w)
+    for w in rejected:
+        assert not _accepts(plan, list(w)), (pattern, w)
+
+
+def test_khop_plan_is_chain():
+    for k in (1, 2, 5):
+        plan = khop_query(k)
+        assert plan.max_hops == k
+        assert len(plan.transitions) == k
+
+
+def test_parse_errors():
+    for bad in ["(a", "a |", "*a", "a !"]:
+        with pytest.raises(ValueError):
+            compile_rpq(bad)

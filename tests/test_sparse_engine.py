@@ -1,0 +1,68 @@
+"""Sparse-frontier k-hop (core/sparse_engine.py) vs the dense oracle —
+the paper's long-path road-network case (§4.2, k in {4,6,8})."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import khop_local
+from repro.core.partition import MoctopusPartitioner, PartitionConfig
+from repro.core.sparse_engine import SparseEngineConfig, SparseKhopEngine
+from repro.core.storage import build_snapshot
+from repro.data.graphs import make_road_graph
+
+
+def _setup(n_nodes=500, P=4, seed=0):
+    src, dst, n = make_road_graph(n_nodes, seed=seed)
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=P))
+    part.on_edges(src, dst)
+    part.migration_pass(src, dst)
+    w = int(np.bincount(src, minlength=n).max())
+    snap = build_snapshot(
+        src, dst, n, part.partition_of, P,
+        hot_threshold=10**9, out_ell_width=max(w, 4),
+    )
+    return src, dst, n, snap
+
+
+@pytest.mark.parametrize("k", [1, 3, 6])
+def test_sparse_khop_matches_dense_oracle(k):
+    src, dst, n, snap = _setup()
+    eng = SparseKhopEngine(snap, SparseEngineConfig(frontier_cap=256))
+    sources = np.array([0, 11, 101, 250])
+    reach, dropped = eng.khop(sources, k)
+    assert dropped == 0, "capacity overflow on a road graph should not happen"
+    ref = khop_local(src, dst, n, sources, k) > 0
+    np.testing.assert_array_equal(reach, ref)
+
+
+def test_sparse_khop_reports_overflow():
+    src, dst, n, snap = _setup(n_nodes=800)
+    eng = SparseKhopEngine(snap, SparseEngineConfig(frontier_cap=4))
+    reach, dropped = eng.khop(np.array([0, 1]), 6)
+    assert dropped > 0  # tiny capacity must overflow and SAY so
+
+
+def test_sparse_wire_is_tiny_vs_dense():
+    """The point of the mode: wire ∝ frontier, not B x n_local."""
+    from repro.core.engine import EngineConfig, MoctopusEngine
+
+    src, dst, n, snap = _setup(n_nodes=2000)
+    sp = SparseKhopEngine(snap, SparseEngineConfig(frontier_cap=128))
+    dense = MoctopusEngine(snap, EngineConfig(), mode="simulated")
+    B = 64
+    assert sp.wire_bytes_per_hop(B) < dense.ipc_bytes_per_hop(B) / 3
+
+
+def test_out_ell_width_guard():
+    src = np.zeros(40, dtype=np.int64)  # one node, out-degree 40
+    dst = np.arange(1, 41, dtype=np.int64)
+    part = MoctopusPartitioner(41, PartitionConfig(num_partitions=2))
+    part.on_edges(src, dst)
+    with pytest.raises(ValueError):
+        build_snapshot(
+            src, dst, 41, part.partition_of, 2,
+            hot_threshold=10**9, out_ell_width=16,
+        )

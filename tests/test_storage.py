@@ -1,0 +1,145 @@
+"""Heterogeneous storage (paper §3.3) + snapshot layout tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import MoctopusPartitioner, PartitionConfig
+from repro.core.storage import (
+    SENTINEL,
+    DynamicGraphStore,
+    build_snapshot,
+    snapshot_from_store,
+)
+from repro.data.graphs import make_rmat_graph, make_road_graph
+
+
+def test_insert_flow_matches_paper_example():
+    """Fig. 3: existence check -> slot alloc -> map update -> positional write."""
+    s = DynamicGraphStore()
+    assert s.insert_edge(1, 2)
+    assert not s.insert_edge(1, 2)  # duplicate detected by elem_position_map
+    pos = s.elem_position_map[(1, 2)]
+    assert s.cols_vector[1][pos] == 2
+    assert s.out_degree(1) == 1
+
+
+def test_delete_frees_slot_for_reuse():
+    s = DynamicGraphStore()
+    s.insert_edge(0, 1)
+    s.insert_edge(0, 2)
+    pos12 = s.elem_position_map[(0, 2)]
+    assert s.delete_edge(0, 2)
+    assert not s.delete_edge(0, 2)  # already gone
+    assert s.cols_vector[0][pos12] == SENTINEL
+    s.insert_edge(0, 3)  # free-list slot is reused
+    assert s.elem_position_map[(0, 3)] == pos12
+    assert s.out_degree(0) == 2
+
+
+def test_row_growth_preserves_edges():
+    s = DynamicGraphStore()
+    for v in range(50):
+        s.insert_edge(7, v + 100)
+    assert s.out_degree(7) == 50
+    src, dst, _ = s.edges()
+    assert len(src) == 50
+    assert set(dst.tolist()) == {v + 100 for v in range(50)}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.booleans(),  # True = insert, False = delete
+            st.integers(0, 15),
+            st.integers(0, 15),
+        ),
+        max_size=200,
+    )
+)
+def test_property_store_matches_set_semantics(ops):
+    """The store must behave exactly like a set of (u, v) pairs."""
+    s = DynamicGraphStore()
+    ref = set()
+    for ins, u, v in ops:
+        if ins:
+            assert s.insert_edge(u, v) == ((u, v) not in ref)
+            ref.add((u, v))
+        else:
+            assert s.delete_edge(u, v) == ((u, v) in ref)
+            ref.discard((u, v))
+    src, dst, _ = s.edges()
+    assert set(zip(src.tolist(), dst.tolist())) == ref
+    assert s.num_edges == len(ref)
+    # free-list sizes + live counts must account for full capacity
+    for u, cols in s.cols_vector.items():
+        assert s.row_len[u] + len(s.free_list_map[u]) == len(cols)
+
+
+# ------------------------------------------------------------------ #
+# snapshot layout
+
+
+def _snap_for(src, dst, n, P=4, **kw):
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=P))
+    part.on_edges(src, dst)
+    part.migration_pass(src, dst)
+    pvec = part.partition_of
+    return build_snapshot(src, dst, n, pvec, P, **kw), part
+
+
+def test_snapshot_renumbering_is_bijective():
+    src, dst, n = make_rmat_graph(500, avg_degree=6, seed=0)
+    snap, _ = _snap_for(src, dst, n)
+    live = snap.new_to_old >= 0
+    assert live.sum() == n
+    round_trip = snap.old_to_new[snap.new_to_old[live]]
+    assert (round_trip == np.nonzero(live)[0]).all()
+
+
+def test_snapshot_every_edge_represented_exactly_once():
+    """in-ELL + buckets + hot dense must partition the edge set."""
+    src, dst, n = make_rmat_graph(400, avg_degree=8, seed=1)
+    # dedup (the store would dedup; build_snapshot assumes unique edges)
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    snap, _ = _snap_for(src, dst, n, P=4, hot_threshold=32)
+    total = 0
+    # in-ELL entries
+    total += int((snap.in_ell != SENTINEL).sum())
+    # bucket entries
+    for b in snap.buckets:
+        total += int((b.src_local != SENTINEL).sum())
+    # hot dense entries
+    total += int(snap.hot_dense.sum())
+    assert total == len(src)
+    assert snap.stats["num_edges"] == len(src)
+
+
+def test_snapshot_road_graph_has_few_active_offsets():
+    """Locality-aware partitioning => most partition-offsets carry no edges
+    (the static skip-list that shrinks the collective schedule)."""
+    src, dst, n = make_road_graph(4000, seed=2)
+    key = src * n + dst
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    P = 8
+    snap, part = _snap_for(src, dst, n, P=P)
+    from repro.core.partition import PIMHashPartitioner
+
+    hsh = PIMHashPartitioner(n, PartitionConfig(num_partitions=P))
+    hsh.on_edges(src, dst)
+    snap_h = build_snapshot(src, dst, n, hsh.partition_of, P)
+    assert snap.stats["crossing_edges"] < snap_h.stats["crossing_edges"]
+
+
+def test_snapshot_from_store_roundtrip():
+    src, dst, n = make_rmat_graph(300, avg_degree=5, seed=3)
+    store = DynamicGraphStore()
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=4))
+    part.on_edges(src, dst)
+    store.insert_edges(src, dst)
+    snap = snapshot_from_store(store, part)
+    assert snap.stats["num_edges"] == store.num_edges

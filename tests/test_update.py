@@ -1,0 +1,60 @@
+"""Graph-update pipeline + baseline engines (paper §3.3, §4.3)."""
+
+import numpy as np
+
+from repro.core.baselines import RedisGraphLike
+from repro.core.engine import khop_local
+from repro.core.partition import MoctopusPartitioner, PartitionConfig
+from repro.core.storage import DynamicGraphStore
+from repro.core.update import GraphUpdater
+from repro.data.graphs import make_rmat_graph
+
+
+def test_updater_insert_then_delete_roundtrip():
+    src, dst, n = make_rmat_graph(500, avg_degree=6, seed=0)
+    store = DynamicGraphStore()
+    part = MoctopusPartitioner(n, PartitionConfig(num_partitions=4))
+    upd = GraphUpdater(store, part, migrate_every=2)
+    for i in range(0, len(src), 512):
+        upd.insert_batch(src[i : i + 512], dst[i : i + 512])
+    assert upd.stats.inserted == store.num_edges
+    # degree view consistent between store and partitioner
+    for u in list(store.cols_vector)[:50]:
+        assert store.out_degree(u) == part.out_degree[u]
+    # delete half the unique edges
+    s2, d2, _ = store.edges()
+    half = len(s2) // 2
+    upd.delete_batch(s2[:half], d2[:half])
+    assert store.num_edges == len(s2) - half
+    # re-deleting is a no-op counted as missing
+    upd.delete_batch(s2[:10], d2[:10])
+    assert upd.stats.missing_deletes >= 10
+
+
+def test_updater_labor_division_promotions():
+    store = DynamicGraphStore()
+    part = MoctopusPartitioner(100, PartitionConfig(num_partitions=2, high_degree_threshold=4))
+    upd = GraphUpdater(store, part)
+    src = np.zeros(20, dtype=np.int64)
+    dst = np.arange(1, 21, dtype=np.int64)
+    upd.insert_batch(src, dst)
+    assert part.partition_of[0] == -2  # HOST
+    assert upd.stats.host_promotions >= 1
+
+
+def test_redisgraph_like_khop_matches_oracle():
+    src, dst, n = make_rmat_graph(200, avg_degree=5, seed=1)
+    rg = RedisGraphLike(src, dst, n)
+    sources = np.array([0, 5, 9])
+    out = rg.khop(sources, 3)
+    ref = khop_local(rg.src, rg.dst, n, sources, 3)
+    np.testing.assert_array_equal(out > 0, ref > 0)
+
+
+def test_redisgraph_like_update_semantics():
+    rg = RedisGraphLike(num_nodes=10)
+    rg.insert_edges([0, 1, 0], [1, 2, 1])  # duplicate collapses
+    assert len(rg.src) == 2
+    rg.delete_edges([0], [1])
+    assert len(rg.src) == 1
+    assert (rg.src[0], rg.dst[0]) == (1, 2)
